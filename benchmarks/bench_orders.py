@@ -1,0 +1,63 @@
+"""Paper Table 1: verify the structural memory ORDERS, not just points.
+
+Three sweeps, each varying one factor with the others held fixed:
+  N (steps), s (stages, via tableau), L (network width as a proxy for
+  per-use activation size).  For each gradient mode we report how live
+  memory scales — the empirical counterpart of Table 1's big-O column.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
+from .common import live_bytes, row
+
+MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
+
+
+def _mem(mode, method, n_steps, hidden, dim=16, batch=256):
+    cfg = CNFConfig(dim=dim, hidden=(hidden, hidden), n_components=1,
+                    method=method, grad_mode=mode, n_steps=n_steps)
+    params = init_cnf(jax.random.PRNGKey(0), cfg)
+    u = jax.random.normal(jax.random.PRNGKey(0), (batch, dim))
+    eps = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+
+    @jax.jit
+    def lg(params, u, eps):
+        return jax.value_and_grad(cnf_nll)(params, u, eps, cfg)
+
+    return live_bytes(lg, params, u, eps)
+
+
+def _ratio(xs, ys):
+    """Growth ratio when the factor doubles (log-log slope ~ order)."""
+    return float(np.polyfit(np.log(xs), np.log(ys), 1)[0])
+
+
+def run():
+    out = {}
+    for mode in MODES:
+        mn = [_mem(mode, "dopri5", n, 128) for n in (8, 16, 32)]
+        ms = [_mem(mode, meth, 8, 128)
+              for meth in ("heun12", "bosh3", "dopri5")]
+        ml = [_mem(mode, "dopri5", 8, h) for h in (64, 128, 256)]
+        out[mode] = {
+            "N_exp": _ratio([8, 16, 32], mn),
+            "s_exp": _ratio([2, 4, 7], ms),
+            "L_exp": _ratio([64, 128, 256], ml),
+        }
+        row(f"orders_{mode}", 0.0,
+            f"dlogM/dlogN={out[mode]['N_exp']:.2f};"
+            f"dlogM/dlogS={out[mode]['s_exp']:.2f};"
+            f"dlogM/dlogL={out[mode]['L_exp']:.2f}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

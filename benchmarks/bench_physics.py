@@ -1,0 +1,67 @@
+"""Paper Table 4: continuous-time physical systems (KdV, Cahn-Hilliard).
+
+HNN++-style energy net, eighth-order Dormand-Prince (13 stages) — the
+regime where the symplectic adjoint's O(s) stage-checkpoint advantage is
+largest.  Reports long-term-prediction MSE, live memory, time/iter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.physics_gen import generate_trajectories
+from repro.models.physics import (PhysicsConfig, init_energy_net,
+                                  physics_loss, predict_next)
+from .common import live_bytes, row, time_call
+
+MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
+MODE_LABEL = {"backprop": "backprop", "remat_step": "ACA",
+              "adjoint": "adjoint", "symplectic": "symplectic(ours)"}
+
+
+def run(system: str = "kdv", steps: int = 80):
+    method = "dopri8" if "dopri8" in __import__(
+        "repro.core.tableau", fromlist=["TABLEAUS"]).TABLEAUS else "dopri5"
+    trajs = generate_trajectories(system, n_traj=4, grid=64,
+                                  n_snapshots=12, substeps=50)
+    u_k = jnp.asarray(trajs[:, :-1].reshape(-1, trajs.shape[-1]))
+    u_k1 = jnp.asarray(trajs[:, 1:].reshape(-1, trajs.shape[-1]))
+    out = {}
+    for mode in MODES:
+        cfg = PhysicsConfig(grid=64, system=system, method=method,
+                            grad_mode=mode, n_steps=4)
+        params = init_energy_net(jax.random.PRNGKey(0), cfg)
+
+        @jax.jit
+        def lg(params, a, b):
+            return jax.value_and_grad(physics_loss)(params, a, b, cfg)
+
+        mem = live_bytes(lg, params, u_k[:32], u_k1[:32])
+        t = time_call(lambda p: lg(p, u_k[:32], u_k1[:32]), params,
+                      iters=2)
+        # short training + long-term rollout MSE
+        p = params
+        lr = 3e-3
+        for i in range(steps):
+            lo = (i * 32) % (u_k.shape[0] - 32)
+            _, g = lg(p, u_k[lo:lo + 32], u_k1[lo:lo + 32])
+            p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        # rollout 5 snapshots from the first state of a held-out traj
+        u = jnp.asarray(trajs[-1, 0:1])
+        mse = 0.0
+        for j in range(1, 6):
+            u = predict_next(p, u, cfg)
+            mse += float(jnp.mean((u - trajs[-1, j]) ** 2))
+        mse /= 5
+        out[mode] = dict(mem=mem, t=t, mse=mse)
+        row(f"physics_{system}_{method}_{MODE_LABEL[mode]}", t * 1e6,
+            f"mem_mb={mem/2**20:.2f};rollout_mse={mse:.5f}")
+    return out
+
+
+def main():
+    run("kdv")
+
+
+if __name__ == "__main__":
+    main()

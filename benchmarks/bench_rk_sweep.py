@@ -1,0 +1,52 @@
+"""Paper Table 3: memory/time across Runge-Kutta methods (s = 2,3,6,12).
+
+The paper's key structural claim: the symplectic adjoint's memory is
+O(MN + s + L) — nearly FLAT in s — while ACA grows as O(MN + sL) and
+backprop as O(MNsL).  We sweep heun12(s=2), bosh3(s=3+fsal),
+dopri5(s=6+fsal), dopri8(s=12) at fixed N and report live bytes + time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tabular import make_tabular_dataset
+from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
+from .common import live_bytes, row, time_call
+
+METHODS = [("heun12", 2), ("bosh3", 3), ("dopri5", 6), ("dopri8", 12)]
+MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
+MODE_LABEL = {"backprop": "backprop", "remat_step": "ACA",
+              "adjoint": "adjoint", "symplectic": "symplectic(ours)"}
+
+
+def run(batch: int = 256, n_steps: int = 8):
+    data = make_tabular_dataset("gas", n=batch)
+    u = jnp.asarray(data)
+    eps = jax.random.normal(jax.random.PRNGKey(1), u.shape)
+    out = {}
+    for method, s in METHODS:
+        for mode in MODES:
+            cfg = CNFConfig(dim=u.shape[1], hidden=(64, 64),
+                            n_components=1, method=method, grad_mode=mode,
+                            n_steps=n_steps)
+            params = init_cnf(jax.random.PRNGKey(0), cfg)
+
+            @jax.jit
+            def lg(params, u, eps):
+                return jax.value_and_grad(cnf_nll)(params, u, eps, cfg)
+
+            mem = live_bytes(lg, params, u, eps)
+            t = time_call(lambda p: lg(p, u, eps), params, iters=2)
+            out[(method, mode)] = dict(mem=mem, t=t)
+            row(f"rk_{method}_s{s}_{MODE_LABEL[mode]}", t * 1e6,
+                f"mem_mb={mem/2**20:.2f}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Fig. 2: memory vs number of steps N (fixed dopri5).
+
+Orders (Table 1): backprop O(NsL); ACA O(N + sL); symplectic O(N + s + L);
+adjoint O(L).  We sweep N and fit the slope of live bytes in N: backprop's
+slope is ~s*L-activations per step, symplectic's is one state vector per
+step (the checkpoint), adjoint's is ~0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
+from .common import live_bytes, row
+
+MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
+MODE_LABEL = {"backprop": "backprop", "remat_step": "ACA",
+              "adjoint": "adjoint", "symplectic": "symplectic(ours)"}
+NS = [4, 8, 16, 32]
+
+
+def run(dim: int = 16, batch: int = 512):
+    u = jax.random.normal(jax.random.PRNGKey(0), (batch, dim))
+    eps = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
+    out = {}
+    for mode in MODES:
+        mems = []
+        for n in NS:
+            cfg = CNFConfig(dim=dim, hidden=(128, 128), n_components=1,
+                            method="dopri5", grad_mode=mode, n_steps=n)
+            params = init_cnf(jax.random.PRNGKey(0), cfg)
+
+            @jax.jit
+            def lg(params, u, eps):
+                return jax.value_and_grad(cnf_nll)(params, u, eps, cfg)
+
+            mems.append(live_bytes(lg, params, u, eps))
+        slope = np.polyfit(NS, mems, 1)[0]
+        out[mode] = dict(mems=mems, slope=slope)
+        row(f"steps_{MODE_LABEL[mode]}", 0.0,
+            "mem_mb=" + "/".join(f"{m/2**20:.2f}" for m in mems)
+            + f";slope_bytes_per_step={slope:.0f}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark utilities: wall-time + structural-memory measurement.
+
+Memory on this CPU container is measured STRUCTURALLY: the compiled
+artifact's live-buffer requirement (argument + output + temp - aliased
+bytes from compiled.memory_analysis()).  This is exactly the quantity the
+paper's Table 1/2/3 memory columns model (what must be resident during one
+optimization step), and it is what a TPU deployment must fit in HBM.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def live_bytes(jitted, *args) -> int:
+    """Peak live bytes of the compiled program (structural memory)."""
+    compiled = jitted.lower(*args).compile()
+    m = compiled.memory_analysis()
+    return (m.argument_size_in_bytes + m.output_size_in_bytes
+            + m.temp_size_in_bytes - m.alias_size_in_bytes)
+
+
+def temp_bytes(jitted, *args) -> int:
+    compiled = jitted.lower(*args).compile()
+    return compiled.memory_analysis().temp_size_in_bytes
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

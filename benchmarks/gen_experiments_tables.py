@@ -1,0 +1,84 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSONL files."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    r = json.loads(line)
+                    rows[(r["arch"], r["shape"], r.get("mesh"))] = r
+    except FileNotFoundError:
+        pass
+    return rows
+
+
+def gb(x):
+    return f"{x / 2**30:.2f}"
+
+
+def main():
+    sp = load(sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun.jsonl")
+    mp = load(sys.argv[2] if len(sys.argv) > 2 else "runs/dryrun_mp.jsonl")
+
+    print("### Dry-run table (single-pod 16x16 = 256 chips; multipod "
+          "2x16x16 = 512 chips pass/fail in last column)\n")
+    print("| arch | shape | kind | params | hbm GB (tpu-corr) | "
+          "flops/dev | coll bytes/dev | AR/AG/RS/A2A (GB) | compile s | "
+          "512-chip |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(sp):
+        r = sp[key]
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | - | - | ERROR | - | - |"
+                  f" - | - | - |")
+            continue
+        c = r["collective_bytes_per_device"]
+        mp_r = mp.get(key[:2] + ("2x16x16",))
+        mp_ok = "-" if mp_r is None else \
+            ("FAIL" if "error" in mp_r else
+             f"OK ({mp_r['peak_hbm_gb_tpu']}G)")
+        print(f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+              f"{r['n_params']/1e9:.2f}B | "
+              f"{r['peak_hbm_gb']} ({r.get('peak_hbm_gb_tpu', '?')}) | "
+              f"{r['flops_per_device']:.2e} | "
+              f"{r['collective_total_bytes']:.2e} | "
+              f"{gb(c['all-reduce'])}/{gb(c['all-gather'])}/"
+              f"{gb(c['reduce-scatter'])}/{gb(c['all-to-all'])} | "
+              f"{r['compile_s']} | {mp_ok} |")
+
+    print("\n### Roofline table (single-pod, per chip per step; "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s link)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | MODEL_FLOPS/HLO | fsdp/mb |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(sp):
+        r = sp[key]
+        if "error" in r:
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+              f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+              f"**{t['bottleneck']}** | "
+              f"{r.get('useful_flops_ratio', 0) or 0:.3f} | "
+              f"{r.get('fsdp', False)}/{r.get('microbatches', 1)} |")
+
+    ok = [r for r in sp.values() if "error" not in r]
+    n_mem = sum(1 for r in ok if r["roofline"]["bottleneck"] == "memory")
+    n_col = sum(1 for r in ok
+                if r["roofline"]["bottleneck"] == "collective")
+    print(f"\nSingle-pod cells: {len(ok)} ok / {len(sp)} total; "
+          f"bottlenecks: memory={n_mem} collective={n_col} "
+          f"compute={len(ok) - n_mem - n_col}")
+    mp_ok = [r for r in mp.values() if "error" not in r]
+    print(f"Multi-pod cells: {len(mp_ok)} ok / {len(mp)} total")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline table generator: reads the dry-run JSONL and prints per-cell
+compute/memory/collective terms + bottleneck (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "runs",
+                            "dryrun.jsonl")
+
+
+def load(path):
+    cells = {}
+    if not os.path.exists(path):
+        return cells
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            r = json.loads(line)
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                   r.get("node_mode", False), r.get("ep", False),
+                   r.get("variant", ""))
+            cells[key] = r   # last write wins
+    return cells
+
+
+def fmt_row(r):
+    t = r.get("roofline", {})
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"cmp={t.get('compute_s', 0):9.4f}s "
+            f"mem={t.get('memory_s', 0):9.4f}s "
+            f"col={t.get('collective_s', 0):9.4f}s "
+            f"bot={t.get('bottleneck', '?'):10s} "
+            f"hbm={r.get('peak_hbm_gb', -1):7.2f}GB "
+            f"useful={r.get('useful_flops_ratio', 0) or 0:6.3f}")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    cells = load(path)
+    ok = [r for r in cells.values() if "error" not in r]
+    bad = [r for r in cells.values() if "error" in r]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print("roofline," + fmt_row(r))
+    if bad:
+        print(f"roofline,FAILED_CELLS={len(bad)}")
+        for r in bad:
+            print(f"roofline,FAIL {r['arch']} {r['shape']} {r['mesh']}: "
+                  f"{r['error'][:120]}")
+    if ok:
+        n_mem = sum(1 for r in ok
+                    if r["roofline"]["bottleneck"] == "memory")
+        n_col = sum(1 for r in ok
+                    if r["roofline"]["bottleneck"] == "collective")
+        n_cmp = len(ok) - n_mem - n_col
+        print(f"roofline,summary cells={len(ok)} memory_bound={n_mem} "
+              f"collective_bound={n_col} compute_bound={n_cmp}")
+
+
+if __name__ == "__main__":
+    main()

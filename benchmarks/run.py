@@ -1,0 +1,65 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_tolerance  -> Fig. 1  (gradient error vs tolerance)
+  bench_steps      -> Fig. 2  (memory vs number of steps)
+  bench_orders     -> Table 1 (memory scaling orders in N, s, L)
+  bench_cnf        -> Table 2 (CNF: NLL / memory / time per grad method)
+  bench_rk_sweep   -> Table 3 (RK methods s=2,3,6,12)
+  bench_physics    -> Table 4 (KdV / Cahn-Hilliard, dopri8)
+  roofline         -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import time
+import traceback
+
+
+def _tolerance_subprocess():
+    # bench_tolerance enables x64 globally; isolate it in a subprocess so
+    # the f32 benches in this process are unaffected.
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_tolerance"],
+        capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-2000:])
+        raise RuntimeError("bench_tolerance failed")
+
+
+def main() -> None:
+    from . import (bench_cnf, bench_orders, bench_physics, bench_rk_sweep,
+                   bench_steps, roofline)
+
+    benches = [
+        ("bench_tolerance", _tolerance_subprocess),
+        ("bench_steps", bench_steps.main),
+        ("bench_orders", bench_orders.main),
+        ("bench_cnf", bench_cnf.main),
+        ("bench_rk_sweep", bench_rk_sweep.main),
+        ("bench_physics", bench_physics.main),
+        ("roofline", roofline.main),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    for name, fn in benches:
+        if only and only != name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

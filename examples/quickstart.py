@@ -1,0 +1,66 @@
+"""Quickstart: the symplectic adjoint method in 60 lines.
+
+Trains a tiny neural ODE on a 2-D spiral flow and shows the headline
+property: the symplectic adjoint returns the same gradient as
+backpropagation-through-the-solver (exact), while the classic continuous
+adjoint does not — at a fraction of backprop's memory.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import odeint
+
+jax.config.update("jax_enable_x64", True)
+
+
+def field(x, t, p):
+    h = jnp.tanh(x @ p["w1"] + p["b1"])
+    return h @ p["w2"]
+
+
+def main():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = {"w1": jax.random.normal(k1, (2, 32)) * 0.5,
+              "b1": jnp.zeros(32),
+              "w2": jax.random.normal(k2, (32, 2)) * 0.5}
+
+    # target: rotate points by 90 degrees
+    x0 = jax.random.normal(k3, (256, 2))
+    target = x0 @ jnp.array([[0.0, 1.0], [-1.0, 0.0]])
+
+    def loss(params, mode):
+        y = odeint(field, x0, params, method="dopri5", grad_mode=mode,
+                   n_steps=8)
+        return jnp.mean((y - target) ** 2)
+
+    g_sym = jax.grad(loss)(params, "symplectic")
+    g_bp = jax.grad(loss)(params, "backprop")
+    g_adj = jax.grad(loss)(params, "adjoint")
+
+    def rel(a, b):
+        na = jnp.sqrt(sum(jnp.sum((x - y) ** 2) for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))))
+        nb = jnp.sqrt(sum(jnp.sum(x ** 2)
+                          for x in jax.tree_util.tree_leaves(b)))
+        return float(na / nb)
+
+    print(f"|grad_symplectic - grad_backprop| / |grad_backprop| = "
+          f"{rel(g_sym, g_bp):.2e}   <- exact (rounding only)")
+    print(f"|grad_adjoint    - grad_backprop| / |grad_backprop| = "
+          f"{rel(g_adj, g_bp):.2e}   <- discretization error")
+
+    # train with the symplectic adjoint
+    lr = 0.05
+    p = params
+    for step in range(200):
+        l, g = jax.value_and_grad(loss)(p, "symplectic")
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        if step % 50 == 0:
+            print(f"step {step:4d}  loss {float(l):.5f}")
+    print(f"final loss {float(loss(p, 'symplectic')):.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Architecture registry: one module per assigned arch + paper workloads."""
+from .base import SHAPES, ArchConfig, LayerSpec, NodeConfig, ShapeConfig
+from .registry import ARCH_IDS, get_arch, get_smoke_arch
+
+__all__ = ["ArchConfig", "LayerSpec", "NodeConfig", "ShapeConfig", "SHAPES",
+           "ARCH_IDS", "get_arch", "get_smoke_arch"]

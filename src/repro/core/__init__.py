@@ -1,0 +1,23 @@
+"""Core neural-ODE library: tableaus, RK solvers, and the symplectic adjoint.
+
+Public API:
+    odeint, odeint_with_stats, AdaptiveConfig, get_tableau, ButcherTableau,
+    GRAD_MODES
+"""
+from .odeint import GRAD_MODES, odeint, odeint_with_stats
+from .rk import (AdaptiveConfig, rk_solve_adaptive, rk_solve_fixed, rk_stages,
+                 rk_step, tree_scale_add)
+from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
+                         symplectic_step_adjoint)
+from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
+from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
+from .tableau import TABLEAUS, ButcherTableau, get_tableau
+
+__all__ = [
+    "odeint", "odeint_with_stats", "GRAD_MODES", "AdaptiveConfig",
+    "rk_solve_fixed", "rk_solve_adaptive", "rk_step", "rk_stages",
+    "tree_scale_add", "odeint_symplectic", "odeint_symplectic_adaptive",
+    "symplectic_step_adjoint", "odeint_adjoint", "odeint_adjoint_adaptive",
+    "odeint_backprop", "odeint_remat_step", "odeint_remat_solve",
+    "TABLEAUS", "ButcherTableau", "get_tableau",
+]

@@ -1,0 +1,60 @@
+"""Differentiate-through-the-solver gradient modes (the paper's baselines).
+
+  * ``backprop``     — plain jax.grad through the scan; XLA retains every
+                       stage activation: memory O(M N s L)  (paper's "naive
+                       backpropagation").
+  * ``remat_step``   — jax.checkpoint around each RK step: scan saves the step
+                       carries {x_n} and rematerializes one step's s-stage
+                       graph during backward: memory O(M N + s L) — the
+                       ANODE/ACA checkpointing scheme.
+  * ``remat_solve``  — jax.checkpoint around the whole component solve with
+                       nothing saved: re-runs the forward once inside the
+                       backward and then backprops it: memory O(M + N s L) —
+                       the paper's "baseline scheme".
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+
+from .rk import VectorField, rk_solve_fixed, rk_step
+from .tableau import ButcherTableau
+
+Pytree = Any
+
+
+def odeint_backprop(f: VectorField, tab: ButcherTableau, n_steps: int,
+                    x0, t0, t1, params):
+    return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params).x_final
+
+
+def odeint_remat_step(f: VectorField, tab: ButcherTableau, n_steps: int,
+                      x0, t0, t1, params):
+    import jax.numpy as jnp
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    t1 = jnp.asarray(t1, dtype=t0.dtype)
+    h = (t1 - t0) / n_steps
+
+    @jax.checkpoint
+    def step(x, t, params):
+        x_next, _ = rk_step(f, tab, x, t, h, params)
+        return x_next
+
+    def body(x, n):
+        t = t0 + n.astype(t0.dtype) * h
+        return step(x, t, params), None
+
+    xf, _ = jax.lax.scan(body, x0, jnp.arange(n_steps))
+    return xf
+
+
+def odeint_remat_solve(f: VectorField, tab: ButcherTableau, n_steps: int,
+                       x0, t0, t1, params):
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def solve(x0, params):
+        return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params).x_final
+
+    return solve(x0, params)

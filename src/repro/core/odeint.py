@@ -1,0 +1,89 @@
+"""Unified odeint front-end: one entry point, five gradient modes.
+
+    y = odeint(f, x0, params, t0=0., t1=1., method="dopri5",
+               grad_mode="symplectic", n_steps=16)            # fixed grid
+    y = odeint(f, x0, params, ..., adaptive=AdaptiveConfig(...))
+
+``grad_mode``:
+  symplectic   — the paper: exact gradient, memory O(N + s + L)   [default]
+  backprop     — naive: exact gradient, memory O(N s L)
+  remat_step   — ANODE/ACA: exact gradient, memory O(N + s L)
+  remat_solve  — baseline scheme: exact gradient, memory O(N s L) in bwd
+  adjoint      — continuous adjoint: approximate gradient, memory O(L)
+
+The vector field signature is f(x, t, params) -> dx/dt over arbitrary pytrees.
+Times t0/t1 are not differentiated (zero cotangents), matching the paper's
+setting where T is fixed.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+
+from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
+from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
+from .rk import (AdaptiveConfig, VectorField, rk_solve_adaptive,
+                 rk_solve_fixed)
+from .symplectic import odeint_symplectic, odeint_symplectic_adaptive
+from .tableau import ButcherTableau, get_tableau
+
+GRAD_MODES = ("symplectic", "backprop", "remat_step", "remat_solve",
+              "adjoint")
+
+
+def odeint(f: VectorField, x0, params, *, t0=0.0, t1=1.0,
+           method: Union[str, ButcherTableau] = "dopri5",
+           grad_mode: str = "symplectic",
+           n_steps: int = 16,
+           adaptive: Optional[AdaptiveConfig] = None,
+           adjoint_adaptive_cfg: Optional[AdaptiveConfig] = None,
+           adjoint_steps_multiplier: int = 1):
+    tab = get_tableau(method) if isinstance(method, str) else method
+    if grad_mode not in GRAD_MODES:
+        raise ValueError(f"grad_mode {grad_mode!r} not in {GRAD_MODES}")
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    t1 = jnp.asarray(t1, dtype=t0.dtype)
+
+    if adaptive is not None:
+        if grad_mode == "symplectic":
+            return odeint_symplectic_adaptive(f, tab, adaptive,
+                                              x0, t0, t1, params)
+        if grad_mode == "adjoint":
+            bwd = adjoint_adaptive_cfg or adaptive
+            return odeint_adjoint_adaptive(f, tab, adaptive, bwd,
+                                           x0, t0, t1, params)
+        if grad_mode == "backprop":
+            # differentiable-through adaptive solve (expensive; for tests)
+            return rk_solve_adaptive(f, tab, x0, t0, t1, params,
+                                     adaptive).x_final
+        raise ValueError(
+            f"grad_mode {grad_mode!r} unsupported with adaptive stepping")
+
+    if grad_mode == "symplectic":
+        return odeint_symplectic(f, tab, n_steps, x0, t0, t1, params)
+    if grad_mode == "backprop":
+        return odeint_backprop(f, tab, n_steps, x0, t0, t1, params)
+    if grad_mode == "remat_step":
+        return odeint_remat_step(f, tab, n_steps, x0, t0, t1, params)
+    if grad_mode == "remat_solve":
+        return odeint_remat_solve(f, tab, n_steps, x0, t0, t1, params)
+    if grad_mode == "adjoint":
+        return odeint_adjoint(f, tab, n_steps, adjoint_steps_multiplier,
+                              x0, t0, t1, params)
+    raise AssertionError
+
+
+def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=1.0,
+                      method: Union[str, ButcherTableau] = "dopri5",
+                      n_steps: int = 16,
+                      adaptive: Optional[AdaptiveConfig] = None):
+    """Non-differentiable solve returning integration statistics."""
+    tab = get_tableau(method) if isinstance(method, str) else method
+    if adaptive is None:
+        sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+        return sol.x_final, {"n_steps": n_steps,
+                             "n_fevals": n_steps * tab.s}
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, adaptive)
+    return sol.x_final, {"n_steps": sol.n_accepted,
+                         "n_fevals": sol.n_fevals}

@@ -1,0 +1,217 @@
+"""Explicit Runge-Kutta integration over arbitrary pytree states.
+
+Two drivers:
+  * ``rk_solve_fixed``    — N equal steps via lax.scan (deterministic shape;
+                            used by the LM node_mode and all dry-run cells).
+  * ``rk_solve_adaptive`` — PI-controlled adaptive stepping via lax.while_loop
+                            with a bounded ``max_steps`` checkpoint buffer
+                            (used by the CNF / physics experiments, mirroring
+                            the paper's dopri5-adaptive setting).
+
+Both record the step checkpoints {x_n, t_n, h_n} that Algorithm 1 of the paper
+retains; computation graphs are never part of the residuals (the gradient
+modes in odeint.py decide what autodiff sees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tableau import ButcherTableau
+
+Pytree = Any
+VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
+# f(x, t, params) -> dx/dt, pytree-in pytree-out.
+
+
+def tree_scale_add(base: Pytree, terms) -> Pytree:
+    """base + sum_i coef_i * tree_i, fused per leaf.
+
+    ``terms`` is a list of (coef, tree). Zero coefficients (python floats)
+    are dropped at trace time, so explicit tableaus pay only for their
+    nonzero entries.
+    """
+    terms = [(c, t) for (c, t) in terms
+             if not (isinstance(c, float) and c == 0.0)]
+    if not terms:
+        return base
+    leaves_b, treedef = jax.tree_util.tree_flatten(base)
+    term_leaves = [jax.tree_util.tree_flatten(t)[0] for _, t in terms]
+    coefs = [c for c, _ in terms]
+    out = []
+    for idx, lb in enumerate(leaves_b):
+        acc = lb
+        for c, leaves in zip(coefs, term_leaves):
+            acc = acc + jnp.asarray(c, dtype=lb.dtype) * leaves[idx]
+        out.append(acc)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def rk_stages(f: VectorField, tab: ButcherTableau, x, t, h, params):
+    """Compute all stage states X_i and slopes k_i for one step.
+
+    Returns (Xs, ks) as lists of pytrees, length s. Purely forward; the
+    symplectic backward pass re-runs this from a checkpoint (Alg. 2 lines 3-7).
+    """
+    s = tab.s
+    Xs, ks = [], []
+    for i in range(s):
+        Xi = tree_scale_add(
+            x, [(tab.a[i][j], _hk(h, ks[j])) for j in range(i)])
+        ki = f(Xi, t + tab.c[i] * h, params)
+        Xs.append(Xi)
+        ks.append(ki)
+    return Xs, ks
+
+
+def _hk(h, k):
+    # cast h into each leaf dtype so mixed-precision states keep their dtype
+    return jax.tree_util.tree_map(
+        lambda l: jnp.asarray(h, dtype=l.dtype) * l, k)
+
+
+def rk_step(f: VectorField, tab: ButcherTableau, x, t, h, params):
+    """One explicit RK step: returns (x_next, err_estimate_or_None)."""
+    Xs, ks = rk_stages(f, tab, x, t, h, params)
+    x_next = tree_scale_add(
+        x, [(tab.b[i], _hk(h, ks[i])) for i in range(tab.s)])
+    err = None
+    if tab.b_err is not None:
+        ks_err = list(ks)
+        if tab.err_uses_fsal:
+            ks_err.append(f(x_next, t + h, params))
+        err = tree_scale_add(
+            jax.tree_util.tree_map(jnp.zeros_like, x),
+            [(tab.b_err[i], _hk(h, ks_err[i])) for i in range(len(ks_err))])
+    return x_next, err
+
+
+class FixedSolution(NamedTuple):
+    x_final: Pytree
+    xs: Pytree          # stacked checkpoints x_0..x_{N-1} (leading dim N)
+    ts: jnp.ndarray     # t_0..t_{N-1}
+    h: jnp.ndarray      # scalar step size
+
+
+def rk_solve_fixed(f: VectorField, tab: ButcherTableau, x0, t0, t1,
+                   n_steps: int, params) -> FixedSolution:
+    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+    t1 = jnp.asarray(t1, dtype=t0.dtype)
+    h = (t1 - t0) / n_steps
+
+    def body(carry, n):
+        x, = carry
+        t = t0 + n.astype(t0.dtype) * h
+        x_next, _ = rk_step(f, tab, x, t, h, params)
+        return (x_next,), (x, t)
+
+    (xf,), (xs, ts) = jax.lax.scan(body, (x0,), jnp.arange(n_steps))
+    return FixedSolution(xf, xs, ts, h)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive stepping (PI controller), bounded buffer of accepted checkpoints.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    rtol: float = 1e-6
+    atol: float = 1e-8
+    max_steps: int = 256          # checkpoint buffer bound (accepted steps)
+    max_attempts: int = 4096      # total trial-step bound
+    safety: float = 0.9
+    min_factor: float = 0.2
+    max_factor: float = 10.0
+    initial_step: float = 0.01
+
+
+class AdaptiveSolution(NamedTuple):
+    x_final: Pytree
+    xs: Pytree           # (max_steps, ...) accepted checkpoints, zero-padded
+    ts: jnp.ndarray      # (max_steps,)
+    hs: jnp.ndarray      # (max_steps,)
+    n_accepted: jnp.ndarray  # int32 scalar
+    n_fevals: jnp.ndarray    # int32 scalar
+
+
+def _error_norm(err, x, x_next, rtol, atol):
+    leaves = zip(jax.tree_util.tree_leaves(err),
+                 jax.tree_util.tree_leaves(x),
+                 jax.tree_util.tree_leaves(x_next))
+    total, count = 0.0, 0
+    for e, a, b in leaves:
+        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        r = (e / scale).astype(jnp.float32)
+        total = total + jnp.sum(r * r)
+        count += r.size
+    return jnp.sqrt(total / count)
+
+
+def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
+                      params, cfg: AdaptiveConfig) -> AdaptiveSolution:
+    if tab.b_err is None:
+        raise ValueError(f"tableau {tab.name} has no embedded error estimate")
+    dtype = jnp.result_type(float)
+    t0 = jnp.asarray(t0, dtype=dtype)
+    t1 = jnp.asarray(t1, dtype=dtype)
+    direction = jnp.sign(t1 - t0)
+    err_exp = -1.0 / (tab.err_order + 1.0)
+
+    zeros_like_buf = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((cfg.max_steps,) + l.shape, l.dtype), x0)
+    ts_buf = jnp.zeros((cfg.max_steps,), dtype)
+    hs_buf = jnp.zeros((cfg.max_steps,), dtype)
+
+    def cond(state):
+        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
+        return (direction * (t1 - t) > 1e-14) \
+            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts)
+
+    def body(state):
+        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
+        # clamp the step so we land exactly on t1
+        h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
+        x_next, err = rk_step(f, tab, x, t, h_eff, params)
+        enorm = _error_norm(err, x, x_next, cfg.rtol, cfg.atol)
+        accept = enorm <= 1.0
+        factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
+                                                 err_exp),
+                          cfg.min_factor, cfg.max_factor)
+        h_new = h_eff * factor
+
+        xs = jax.tree_util.tree_map(
+            lambda buf, val: jax.lax.cond(
+                accept,
+                lambda: jax.lax.dynamic_update_index_in_dim(
+                    buf, val.astype(buf.dtype), n_acc, 0),
+                lambda: buf),
+            xs, x)
+        ts = jax.lax.cond(
+            accept,
+            lambda: jax.lax.dynamic_update_index_in_dim(ts_buf_like(ts), t,
+                                                        n_acc, 0),
+            lambda: ts)
+        hs = jax.lax.cond(
+            accept,
+            lambda: jax.lax.dynamic_update_index_in_dim(ts_buf_like(hs),
+                                                        h_eff, n_acc, 0),
+            lambda: hs)
+        t = jnp.where(accept, t + h_eff, t)
+        x = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(accept, b, a), x, x_next)
+        n_acc = n_acc + accept.astype(jnp.int32)
+        fevals = tab.s + (1 if tab.err_uses_fsal else 0)
+        return (t, x, h_new, n_acc, n_try + 1, xs, ts, hs, fe + fevals)
+
+    def ts_buf_like(b):
+        return b
+
+    h0 = direction * jnp.asarray(cfg.initial_step, dtype)
+    state0 = (t0, x0, h0, jnp.int32(0), jnp.int32(0),
+              zeros_like_buf, ts_buf, hs_buf, jnp.int32(0))
+    (t, x, h, n_acc, n_try, xs, ts, hs, fe) = jax.lax.while_loop(
+        cond, body, state0)
+    return AdaptiveSolution(x, xs, ts, hs, n_acc, fe)

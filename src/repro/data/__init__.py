@@ -1,0 +1,6 @@
+from .tokens import synthetic_lm_batch, TokenPipeline
+from .tabular import make_tabular_dataset
+from .physics_gen import generate_trajectories
+
+__all__ = ["synthetic_lm_batch", "TokenPipeline", "make_tabular_dataset",
+           "generate_trajectories"]

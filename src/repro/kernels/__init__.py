@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical hot spots, with jnp oracles.
+
+  butcher_combine — fused RK stage combination (the paper's Eq. 5 hot loop)
+  rms_norm        — fused residual + RMSNorm
+  attention       — flash attention (causal, GQA, sliding window, decode)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
+with TPU/oracle dispatch), ref.py (pure-jnp oracle).
+"""
+from .ops import attention, butcher_combine, rms_norm
+
+__all__ = ["attention", "butcher_combine", "rms_norm"]

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels with oracle fallback.
+
+``use_pallas``: None (auto) selects the Pallas path only on TPU backends;
+the pure-jnp oracle otherwise (CPU dry-run / tests call the kernels
+explicitly with interpret=True).  This keeps the 512-device dry-run lowering
+free of Mosaic ops while the TPU deployment path hits the kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .butcher_combine import butcher_combine_pallas
+from .flash_attention import flash_attention_pallas
+from .rmsnorm import rms_norm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(use_pallas: Optional[bool]) -> bool:
+    return _on_tpu() if use_pallas is None else use_pallas
+
+
+def butcher_combine(x, ks, coefs, h, *, use_pallas: Optional[bool] = None):
+    if _resolve(use_pallas):
+        return butcher_combine_pallas(x, ks, jnp.asarray(coefs),
+                                      jnp.asarray(h),
+                                      interpret=not _on_tpu())
+    return ref.butcher_combine_ref(x, ks, jnp.asarray(coefs), jnp.asarray(h))
+
+
+def rms_norm(x, weight, residual=None, *, eps: float = 1e-6,
+             use_pallas: Optional[bool] = None):
+    if _resolve(use_pallas):
+        return rms_norm_pallas(x, weight, residual, eps=eps,
+                               interpret=not _on_tpu())
+    return ref.rms_norm_ref(x, weight, residual, eps=eps)
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, q_offset: int = 0,
+              scale: Optional[float] = None,
+              use_pallas: Optional[bool] = None):
+    if _resolve(use_pallas):
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      q_offset=q_offset, scale=scale,
+                                      interpret=not _on_tpu())
+    Sq, Sk = q.shape[2], k.shape[2]
+    if Sq * Sk > 2048 * 4096 and Sq >= 1024:
+        # long-sequence path: query-blocked, never materializes (Sq, Sk)
+        return ref.attention_blocked_ref(q, k, v, causal=causal,
+                                         window=window, q_offset=q_offset,
+                                         scale=scale)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, scale=scale)

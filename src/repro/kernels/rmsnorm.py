@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused residual-add + RMSNorm.
+
+out = rmsnorm(x [+ residual]) * weight, computed in float32 in VMEM.
+
+Pre-norm transformers evaluate this 2x per block x N steps x (1 fwd + 3 bwd
+under the symplectic adjoint), and it is strictly memory-bound: fusing the
+residual add saves one full HBM round-trip of the activation tensor.
+
+Tiling: rows = all leading dims flattened; the feature dim d (multiple of
+128 for every assigned architecture after padding) stays resident per tile,
+so the mean-of-squares reduction happens entirely in VMEM/VREGs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_nores(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _kernel_res(x_ref, res_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rms_norm_pallas(x: jnp.ndarray, weight: jnp.ndarray,
+                    residual: Optional[jnp.ndarray] = None,
+                    *, eps: float = 1e-6, block_rows: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    rows = x.size // d
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad - rows
+
+    def prep(a):
+        return jnp.pad(a.reshape(rows, d), ((0, pad), (0, 0)))
+
+    xf = prep(x)
+    grid = (rows_pad // block_rows,)
+    row_spec = pl.BlockSpec((block_rows, d), lambda r: (r, 0))
+    w_spec = pl.BlockSpec((d,), lambda r: (0,))
+
+    if residual is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel_nores, eps=eps),
+            grid=grid,
+            in_specs=[row_spec, w_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((rows_pad, d), x.dtype),
+            interpret=interpret,
+        )(xf, weight)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_res, eps=eps),
+            grid=grid,
+            in_specs=[row_spec, row_spec, w_spec],
+            out_specs=row_spec,
+            out_shape=jax.ShapeDtypeStruct((rows_pad, d), x.dtype),
+            interpret=interpret,
+        )(xf, prep(residual), weight)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,127 @@
+"""Compiled-artifact analysis: collective-byte parsing + roofline terms.
+
+Hardware model (TPU v5e target):
+    peak bf16 compute   197 TFLOP/s / chip
+    HBM bandwidth       819 GB/s   / chip
+    ICI link bandwidth  ~50 GB/s   / link
+
+Roofline terms (seconds, per step, per chip — the dry-run compiles the
+per-device SPMD module so cost_analysis is already per-chip):
+    compute    = HLO_FLOPs / peak_flops
+    memory     = HLO_bytes / hbm_bw
+    collective = collective_bytes / link_bw
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op in an HLO module.
+
+    Counts `op(...)` and `op-start(...)` (async) forms once; `-done` ops are
+    skipped.  Tuple shapes `(f32[..], f32[..])` sum their components.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?\S+\s*=\s*(\(?[^=]*?\)?)\s+"
+                     r"([a-z0-9\-]+)\(", line)
+        if not m:
+            continue
+        shape_part, op = m.groups()
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        total = 0
+        for sm in _SHAPE_RE.finditer(shape_part):
+            total += _shape_bytes(sm.group(0))
+        out[base] += total
+    return out
+
+
+_UPCAST_RE = re.compile(
+    r"\(param[^:]*: bf16\[([0-9,]+)\]\) -> f32\[\1\]")
+
+
+def bf16_upcast_bytes(hlo_text: str, min_bytes: int = 1 << 27) -> int:
+    """Bytes of whole-tensor bf16->f32 convert fusions (>=128 MB each).
+
+    The CPU backend lowers bf16 dots by converting operands to f32; when a
+    scanned layer stack feeds such dots, the converts get hoisted into
+    full-stack f32 copies.  TPU's MXU consumes bf16 natively, so these
+    buffers DO NOT EXIST on the target hardware — we measure them here and
+    report both the raw CPU number and the TPU-corrected peak.
+    """
+    total = 0
+    for m in _UPCAST_RE.finditer(hlo_text):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        if n * 4 >= min_bytes:
+            total += n * 4
+    return total
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(terms["compute_s"], terms["memory_s"],
+                terms["collective_s"])
+    terms["roofline_fraction"] = (terms["compute_s"] / total) \
+        if total > 0 else 0.0
+    return terms
+
+
+def model_flops_per_step(n_active_params: float, tokens: float,
+                         kind: str) -> float:
+    """6ND for training, 2ND for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def count_params(tree) -> int:
+    import jax
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "size"))

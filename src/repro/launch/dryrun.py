@@ -1,0 +1,477 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod), abstract-initializes the full train/serve state with
+jax.eval_shape (no allocation), attaches the parallel/shardings.py
+PartitionSpecs, and runs jax.jit(...).lower(...).compile().  Success proves
+the sharding config is coherent; the compiled artifact yields
+memory_analysis (fits-per-chip proof) and cost_analysis + collective bytes
+(the §Roofline inputs).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multipod] [--out runs/dryrun.jsonl] \
+        [--node-mode] [--ep] [--all]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ArchConfig, NodeConfig, ShapeConfig
+from repro.configs.registry import ARCH_IDS, cell_is_applicable
+from repro.launch.analysis import (bf16_upcast_bytes, collective_bytes,
+                                   count_params, model_flops_per_step,
+                                   roofline_terms)
+from repro.launch.mesh import make_production_mesh
+from repro.models.encdec import init_encdec_caches
+from repro.models.lm import init_caches
+from repro.parallel import (batch_specs, cache_specs, make_sharder,
+                            param_specs, state_specs)
+from repro.train import (TrainConfig, init_train_state, make_decode_step,
+                         make_prefill_step, make_train_step)
+
+SDS = jax.ShapeDtypeStruct
+I32 = jnp.int32
+N_VLM_PATCHES = 256
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per cell
+# ---------------------------------------------------------------------------
+
+def train_input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if arch.encdec:
+        return {"frames": SDS((B, S, arch.d_frontend), jnp.bfloat16),
+                "tokens": SDS((B, S), I32), "labels": SDS((B, S), I32)}
+    if arch.frontend == "patch":
+        St = S - N_VLM_PATCHES
+        return {"patch_embeds": SDS((B, N_VLM_PATCHES, arch.d_frontend),
+                                    jnp.bfloat16),
+                "tokens": SDS((B, St), I32), "labels": SDS((B, St), I32)}
+    return {"tokens": SDS((B, S), I32), "labels": SDS((B, S), I32)}
+
+
+def abstract_state(arch: ArchConfig, tcfg: TrainConfig):
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), arch, tcfg))
+
+
+def abstract_caches(arch: ArchConfig, batch: int, max_len: int):
+    if arch.encdec:
+        return jax.eval_shape(
+            lambda: init_encdec_caches(arch, batch, max_len, max_len))
+    return jax.eval_shape(
+        lambda: init_caches(arch, batch, max_len))
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+MAMBA_PARAM_NAMES = frozenset({"in_proj", "out_proj", "x_proj",
+                               "dt_proj", "conv_w", "conv_b"})
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             node_mode: bool = False, ep: bool = False,
+             seq_shard_train: Optional[str] = None,
+             param_dtype: str = "bfloat16",
+             correction: bool = True,
+             replicate_mamba: bool = False,
+             verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    arch = get_arch(arch_id).with_(use_pallas=False)
+    if node_mode:
+        arch = arch.with_(node=NodeConfig(mode="node", method="euler",
+                                          grad_mode="symplectic"))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    tcfg = TrainConfig(param_dtype=param_dtype)
+
+    overrides = {}
+    if seq_shard_train:
+        overrides["seq"] = seq_shard_train
+    shard = make_sharder(mesh, overrides=overrides)
+
+    t0 = time.time()
+    state_abs = abstract_state(arch, tcfg)
+    # FSDP for training of >8B-param models: TP alone cannot hold params +
+    # optimizer + transients in 16 GB/chip (production default at this
+    # scale).  Serving stays TP-only (per-layer all-gathers would add
+    # decode latency; params-only fit fine).
+    n_params_est = count_params(state_abs["params"])
+    fsdp = shape.kind == "train" and n_params_est > 8e9
+    # gradient accumulation: bound per-microbatch activation / MoE-capacity
+    # buffers.  >8B models by default; jamba's 8-layer unit and xlstm's
+    # recurrent transients need it too (see EXPERIMENTS.md §Perf Cell A).
+    MB = {"jamba-v0.1-52b": 8, "xlstm-1.3b": 4}
+    mb = MB.get(arch_id, 4 if n_params_est > 8e9 else 1)
+    if shape.kind == "train" and mb > 1 and tcfg.microbatches == 1:
+        tcfg = TrainConfig(param_dtype=param_dtype, microbatches=mb)
+    sspecs = state_specs(state_abs, mesh, fsdp=fsdp)
+    state_sh = _sh(mesh, sspecs)
+    result = {"arch": arch_id, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "n_chips": n_chips, "kind": shape.kind,
+              "node_mode": node_mode, "ep": ep, "fsdp": fsdp,
+              "microbatches": tcfg.microbatches,
+              "replicate_mamba": replicate_mamba}
+
+    with mesh:
+        if shape.kind == "train":
+            batch_abs = train_input_specs(arch, shape)
+            batch_sh = _sh(mesh, batch_specs(batch_abs, mesh))
+            # ZeRO-2-style gradient sharding hook (see make_train_step)
+            gsh = _sh(mesh, sspecs["opt"]["m"])
+
+            def grad_constraint(grads):
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, grads, gsh)
+
+            step = make_train_step(arch, tcfg, shard=shard,
+                                   grad_constraint=grad_constraint)
+            metric_sh = {k: NamedSharding(mesh, P())
+                         for k in ("loss", "grad_norm", "lr")}
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metric_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+            n_tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            B, S = shape.global_batch, shape.seq_len
+            params_abs = state_abs["params"]
+            extra = MAMBA_PARAM_NAMES if replicate_mamba else frozenset()
+            params_sh = _sh(mesh, param_specs(params_abs, mesh, ep=ep,
+                                              extra_replicated=extra))
+            batch_abs = train_input_specs(arch, shape)
+            batch_abs.pop("labels")
+            batch_sh = _sh(mesh, batch_specs(batch_abs, mesh))
+            caches_abs = abstract_caches(arch, B, S)
+            caches_sh = _sh(mesh, cache_specs(caches_abs, mesh,
+                                              batch_size=B))
+
+            def cache_constraint(c):
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, c, caches_sh)
+
+            prefill = make_prefill_step(arch, B, S, shard=shard,
+                                        cache_constraint=cache_constraint)
+            dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+            logits_sh = NamedSharding(mesh, P(
+                dp if B % dp_size == 0 else None, None,
+                "model" if arch.vocab % mesh.shape["model"] == 0
+                else None))
+            jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(logits_sh, caches_sh))
+            lowered = jitted.lower(params_abs, batch_abs)
+            n_tokens = B * S
+        else:  # decode
+            B, S = shape.global_batch, shape.seq_len
+            params_abs = state_abs["params"]
+            params_sh = _sh(mesh, param_specs(params_abs, mesh, ep=ep))
+            caches_abs = abstract_caches(arch, B, S)
+            caches_sh = _sh(mesh, cache_specs(caches_abs, mesh,
+                                              batch_size=B))
+            tok_abs = SDS((B, 1), I32)
+            tok_sh = _sh(mesh, batch_specs({"t": tok_abs}, mesh))["t"]
+            pos_sh = NamedSharding(mesh, P())
+            decode = make_decode_step(arch, shard=shard)
+            jitted = jax.jit(decode,
+                             in_shardings=(params_sh, caches_sh, tok_sh,
+                                           pos_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, caches_abs, tok_abs,
+                                   SDS((), I32))
+            n_tokens = B  # one new token per sequence
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    coll_total = sum(coll.values())
+    upcast = bf16_upcast_bytes(hlo_text)
+
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+
+    # trip-count correction for scanned layer stacks (see docstring)
+    try:
+        corr = unit_flops_correction(arch, shape, mesh, state_abs, shard,
+                                     shape.kind) if correction \
+            else dict(ZERO_COST)
+    except Exception as e:  # noqa: BLE001
+        corr = dict(ZERO_COST)
+        result["correction_error"] = f"{type(e).__name__}: {e}"
+    flops_dev = flops_raw + corr["flops"]
+    bytes_dev = bytes_raw + corr["bytes"]
+    coll_total_corr = coll_total + corr["coll"]
+    terms = roofline_terms(flops_dev, bytes_dev, coll_total_corr)
+
+    n_params = count_params(state_abs["params"])
+    n_active = active_params(arch, n_params)
+    mf = model_flops_per_step(n_active, n_tokens, shape.kind)
+    hlo_flops_global = flops_dev * n_chips
+
+    result.update({
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "n_params": n_params, "n_active_params": n_active,
+        "n_tokens": n_tokens,
+        "bytes_per_device": {
+            "arguments": mem.argument_size_in_bytes,
+            "outputs": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "aliased": mem.alias_size_in_bytes,
+            "code": mem.generated_code_size_in_bytes,
+        },
+        "peak_hbm_gb": round((mem.argument_size_in_bytes
+                              + mem.output_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              - mem.alias_size_in_bytes) / 2**30, 3),
+        "cpu_bf16_upcast_gb": round(upcast / 2**30, 3),
+        "peak_hbm_gb_tpu": round((mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes
+                                  - upcast) / 2**30, 3),
+        "flops_per_device": flops_dev,
+        "flops_per_device_raw": flops_raw,
+        "bytes_accessed_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "collective_total_bytes": coll_total_corr,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": round(mf / hlo_flops_global, 4)
+        if hlo_flops_global else None,
+    })
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+    return result
+
+
+def _cost_of(jitted, *args) -> dict:
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = sum(collective_bytes(compiled.as_text()).values())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll)}
+
+
+def _cost_add(a, b, scale=1.0):
+    return {k: a[k] + scale * b[k] for k in a}
+
+
+ZERO_COST = {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+
+
+def unit_flops_correction(arch: ArchConfig, shape: ShapeConfig, mesh,
+                          state_abs, shard, kind: str) -> float:
+    """XLA cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so scanned layer stacks are undercounted by ~R.  Measure the
+    repeated unit's own compiled FLOPs on the same mesh (fwd for serving;
+    fwd + fwd&bwd for training, matching the remat schedule: fwd-scan body
+    (1x fwd) + bwd-scan body (remat fwd + bwd = 3x fwd-equiv)) and return
+    the missing (R-1) * body FLOPs.  Stays measured-from-compiled-HLO.
+    """
+    from repro.models.lm import _unit_forward
+    from repro.models import encdec as ed
+    from repro.nn.norm import rmsnorm
+    from repro.nn.mlp import swiglu
+
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.bfloat16
+    Sq = 1 if kind == "decode" else S
+    pos = jnp.asarray(S - 1, jnp.int32) if kind == "decode" else None
+
+    def slice0(tree):
+        return jax.tree_util.tree_map(
+            lambda l: SDS(l.shape[1:], l.dtype), tree)
+
+    def measure(body, R, *arg_specs):
+        """body(*args) -> activation tree; returns (R-1) * body costs."""
+        if R <= 1:
+            return dict(ZERO_COST)
+        with mesh:
+            if kind == "train":
+                vg = jax.jit(jax.value_and_grad(
+                    lambda *a: jnp.sum(body(*a).astype(jnp.float32)),
+                    argnums=(0, 1)))
+                f = _cost_of(vg, *arg_specs)
+                f = _cost_add(f, _cost_of(jax.jit(body), *arg_specs))
+            else:
+                f = _cost_of(jax.jit(body), *arg_specs)
+        return {k: (R - 1) * v for k, v in f.items()}
+
+    x_spec = SDS((B, Sq, arch.d_model), dtype)
+
+    if not arch.encdec:
+        unit_abs = state_abs["params"]["unit"]
+        if kind == "train":
+            def body(up, x):
+                out, _, aux = _unit_forward(up, x, arch, shard=shard)
+                return out + 0.0 * aux
+            return measure(body, arch.n_repeats, slice0(unit_abs), x_spec)
+        caches_abs = slice0(abstract_caches(arch, B, S)["unit"])
+
+        def body(up, x, c):
+            out, _, _ = _unit_forward(up, x, arch, caches=c, pos=pos,
+                                      shard=shard)
+            return out
+        return measure(body, arch.n_repeats, slice0(unit_abs), x_spec,
+                       caches_abs)
+
+    # ---- enc-dec ---------------------------------------------------------
+    total = dict(ZERO_COST)
+    mem_spec = SDS((B, S, arch.d_model), dtype)
+
+    def enc_body(up, x):
+        h = rmsnorm(up["attn_norm"], x, eps=arch.norm_eps)
+        y, _ = ed._mha(up["attn"], h, arch, causal=False, shard=shard)
+        x = x + y
+        h = rmsnorm(up["ffn_norm"], x, eps=arch.norm_eps)
+        return x + swiglu(up["mlp"], h, shard=shard)
+
+    def dec_body(up, x, mem, c):
+        self_c = None if c is None else c["self"]
+        cross_c = None if c is None else c["cross"]
+        h = rmsnorm(up["self_norm"], x, eps=arch.norm_eps)
+        y, _ = ed._mha(up["self_attn"], h, arch, causal=True, pos=pos,
+                       cache=self_c, shard=shard)
+        x = x + y
+        h = rmsnorm(up["cross_norm"], x, eps=arch.norm_eps)
+        y, _ = ed._mha(up["cross_attn"], h, arch, kv=mem, causal=False,
+                       cache=cross_c, shard=shard)
+        x = x + y
+        h = rmsnorm(up["ffn_norm"], x, eps=arch.norm_eps)
+        return x + swiglu(up["mlp"], h, shard=shard)
+
+    enc_abs = slice0(state_abs["params"]["enc_unit"])
+    dec_abs = slice0(state_abs["params"]["dec_unit"])
+    if kind == "train":
+        total = _cost_add(total, measure(
+            enc_body, arch.enc_layers, enc_abs,
+            SDS((B, S, arch.d_model), dtype)))
+        total = _cost_add(total, measure(
+            lambda up, x: dec_body(up, x, jnp.zeros(mem_spec.shape, dtype),
+                                   None),
+            arch.n_layers, dec_abs, x_spec))
+        return total
+    if kind == "prefill":
+        # prefill compiles encoder (scan, R=enc_layers) + decoder prefill
+        total = _cost_add(total, measure(
+            enc_body, arch.enc_layers, enc_abs,
+            SDS((B, S, arch.d_model), dtype)))
+        caches_abs = slice0(jax.eval_shape(
+            lambda: init_encdec_caches(arch, B, S, S)))
+        total = _cost_add(total, measure(
+            lambda up, x, c: dec_body(up, x,
+                                      jnp.zeros(mem_spec.shape, dtype), c),
+            arch.n_layers, dec_abs, x_spec, caches_abs))
+        return total
+    caches_abs = slice0(jax.eval_shape(
+        lambda: init_encdec_caches(arch, B, S, S)))
+    total = _cost_add(total, measure(
+        lambda up, x, c: dec_body(up, x, None, c),
+        arch.n_layers, dec_abs, x_spec, caches_abs))
+    return total
+
+
+def active_params(arch: ArchConfig, n_params: int) -> int:
+    """Active (per-token) parameter count for MoE archs."""
+    if arch.moe_experts == 0:
+        return n_params
+    # subtract inactive expert weights
+    moe = arch.moe_config()
+    per_expert = 3 * moe.d_ff * moe.d_model
+    n_moe_layers = sum(1 for s in (list(arch.prefix)
+                                   + list(arch.pattern) * arch.n_repeats)
+                       if s.ffn == "moe")
+    inactive = n_moe_layers * (moe.n_experts - moe.top_k) * per_expert
+    return n_params - inactive
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def iter_cells():
+    for arch_id in ARCH_IDS:
+        for shape_name in SHAPES:
+            if cell_is_applicable(arch_id, shape_name):
+                yield arch_id, shape_name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--node-mode", action="store_true")
+    ap.add_argument("--ep", action="store_true")
+    ap.add_argument("--seq-shard", default=None)
+    ap.add_argument("--replicate-mamba", action="store_true",
+                    help="serve cells: replicate mamba weights (no TP "
+                         "all-reduce per mamba layer)")
+    ap.add_argument("--no-correction", action="store_true",
+                    help="skip the trip-count cost correction (faster; "
+                         "use for the multipod shardability pass)")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    failures = []
+    for arch_id, shape_name in cells:
+        for mp in meshes:
+            try:
+                res = run_cell(arch_id, shape_name, multi_pod=mp,
+                               node_mode=args.node_mode, ep=args.ep,
+                               seq_shard_train=args.seq_shard,
+                               correction=not args.no_correction,
+                               replicate_mamba=args.replicate_mamba)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch_id, "shape": shape_name,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures.append((arch_id, shape_name, mp))
+                print(json.dumps({k: res[k] for k in
+                                  ("arch", "shape", "mesh", "error")}))
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(res, default=str) + "\n")
+    if failures:
+        print(f"FAILED cells: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a request batch, then decode tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, get_smoke_arch
+    from repro.data.tokens import synthetic_lm_batch
+    from repro.train import (TrainConfig, init_train_state,
+                             make_decode_step, make_prefill_step)
+
+    arch = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+    params = state["params"]
+
+    max_len = args.prompt_len + args.gen_len
+    prefill = jax.jit(make_prefill_step(arch, args.batch, max_len))
+    decode = jax.jit(make_decode_step(arch))
+
+    b = synthetic_lm_batch(0, args.batch, args.prompt_len + 1, arch.vocab)
+    batch = {"tokens": jnp.asarray(b["tokens"])}
+    if arch.encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len,
+                                    arch.d_frontend))
+    if arch.frontend == "patch":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, 4, arch.d_frontend))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    offset = 4 if arch.frontend == "patch" else 0
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    for i in range(args.gen_len - 1):
+        pos = jnp.int32(args.prompt_len + offset + i)
+        logits, caches = decode(params, caches, tok, pos)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"[serve] arch={arch.name} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill*1e3:.1f} ms; "
+          f"decode {args.gen_len} tok in {t_decode*1e3:.1f} ms "
+          f"({t_decode/max(args.gen_len-1,1)*1e3:.1f} ms/tok)")
+    print("[serve] sample generation (token ids):", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

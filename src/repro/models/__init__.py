@@ -1,0 +1,1 @@
+"""Model definitions: decoder LMs (dense/MoE/SSM/hybrid), enc-dec, CNF, HNN."""

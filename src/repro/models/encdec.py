@@ -1,0 +1,230 @@
+"""Encoder-decoder transformer (seamless-m4t style, audio frontend stubbed).
+
+Encoder: linear frontend over precomputed fbank-stacked frames
+(B, S_enc, d_frontend) -> non-causal self-attention stack.
+Decoder: causal self-attention + cross-attention over encoder memory + FFN.
+
+Serving: ``prefill`` encodes the source, precomputes per-layer cross K/V,
+fills decoder self-attention caches; ``decode`` advances one target token.
+Cache pytree (stacked over decoder layers):
+  {"self": {"k","v": (L,B,Smax,H,Dh)}, "cross": {"k","v": (L,B,Senc,H,Dh)}}
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.nn.common import dense_init, embed_init, no_shard, split_keys
+from repro.nn.mlp import init_swiglu, swiglu
+from repro.nn.norm import init_rmsnorm, rmsnorm
+from repro.nn.rope import apply_rope, rope_freqs
+
+
+def _init_attn(key, d, H, Dh, dtype):
+    ks = split_keys(key, 4)
+    return {"wq": dense_init(ks[0], (d, H * Dh), dtype),
+            "wk": dense_init(ks[1], (d, H * Dh), dtype),
+            "wv": dense_init(ks[2], (d, H * Dh), dtype),
+            "wo": dense_init(ks[3], (H * Dh, d), dtype)}
+
+
+def init_encdec(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = split_keys(key, 8)
+    d, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+
+    def init_enc_layer(k):
+        kk = split_keys(k, 2)
+        return {"attn_norm": init_rmsnorm(d, dtype),
+                "attn": _init_attn(kk[0], d, H, Dh, dtype),
+                "ffn_norm": init_rmsnorm(d, dtype),
+                "mlp": init_swiglu(kk[1], d, cfg.d_ff, dtype)}
+
+    def init_dec_layer(k):
+        kk = split_keys(k, 3)
+        return {"self_norm": init_rmsnorm(d, dtype),
+                "self_attn": _init_attn(kk[0], d, H, Dh, dtype),
+                "cross_norm": init_rmsnorm(d, dtype),
+                "cross_attn": _init_attn(kk[1], d, H, Dh, dtype),
+                "ffn_norm": init_rmsnorm(d, dtype),
+                "mlp": init_swiglu(kk[2], d, cfg.d_ff, dtype)}
+
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend": dense_init(ks[2], (cfg.d_frontend, d), dtype),
+        "enc_unit": jax.vmap(init_enc_layer)(enc_keys),
+        "enc_norm": init_rmsnorm(d, dtype),
+        "embed": embed_init(ks[3], (cfg.vocab, d), dtype),
+        "dec_unit": jax.vmap(init_dec_layer)(dec_keys),
+        "dec_norm": init_rmsnorm(d, dtype),
+        "lm_head": dense_init(ks[4], (d, cfg.vocab), dtype),
+    }
+
+
+def _mha(p, x, cfg, *, kv=None, causal, positions=None, pos=None,
+         cache=None, shard=no_shard):
+    """Self-attn when kv is None; cross-attn against kv (B,S_kv,d) else.
+    cache (decode self-attn): {"k","v"} updated at pos.
+    Returns (out, new_cache)."""
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    inv = rope_freqs(Dh, cfg.rope_theta)
+    q = (x @ p["wq"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+    new_cache = None
+    if kv is None and cache is None:                    # training self-attn
+        k = (x @ p["wk"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        pp = positions if positions is not None else jnp.arange(S)
+        if causal:
+            q, k = apply_rope(q, pp, inv), apply_rope(k, pp, inv)
+        out = kops.attention(q, k, v, causal=causal,
+                             use_pallas=cfg.use_pallas)
+    elif kv is None:                                    # cached self-attn
+        k = (x @ p["wk"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+        if pos is None:  # prefill into buffer
+            pp = jnp.arange(S)
+            q, k = apply_rope(q, pp, inv), apply_rope(k, pp, inv)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                (0, 0, 0, 0))
+            # pin the per-layer write so the stacked scan output (the
+            # serving cache) is built sharded, not replicated
+            ck = shard(ck, ("batch", "seq_carry", "cache_heads",
+                            "head_dim"))
+            cv = shard(cv, ("batch", "seq_carry", "cache_heads",
+                            "head_dim"))
+            new_cache = {"k": ck, "v": cv}
+            out = kops.attention(q, k, v, causal=True,
+                                 use_pallas=cfg.use_pallas)
+        else:
+            ppos = jnp.reshape(pos, (1,))
+            q, k = apply_rope(q, ppos, inv), apply_rope(k, ppos, inv)
+            z = jnp.zeros((), dtype=jnp.asarray(pos).dtype)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                (z, pos, z, z))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                (z, pos, z, z))
+            new_cache = {"k": ck, "v": cv}
+            out = kref.decode_attention_ref(q, ck, cv, pos)
+    else:                                               # cross-attn
+        if cache is not None and S == 1:                # decode vs memory
+            out = kref.decode_attention_ref(
+                q, cache["k"], cache["v"], cache["k"].shape[1] - 1)
+            new_cache = cache
+            out = out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh) @ p["wo"]
+            return shard(out, ("batch", "seq", "embed")), new_cache
+        if cache is not None:                           # precomputed K/V
+            k = cache["k"].transpose(0, 2, 1, 3).astype(q.dtype)
+            v = cache["v"].transpose(0, 2, 1, 3).astype(q.dtype)
+            new_cache = cache
+        else:
+            Skv = kv.shape[1]
+            k = (kv @ p["wk"]).reshape(B, Skv, H, Dh).transpose(0, 2, 1, 3)
+            v = (kv @ p["wv"]).reshape(B, Skv, H, Dh).transpose(0, 2, 1, 3)
+        out = kops.attention(q, k, v, causal=False,
+                             use_pallas=cfg.use_pallas)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * Dh) @ p["wo"]
+    return shard(out, ("batch", "seq", "embed")), new_cache
+
+
+def encode(params, frames, cfg: ArchConfig, *, shard=no_shard):
+    x = frames.astype(params["frontend"].dtype) @ params["frontend"]
+    x = shard(x, ("batch", "seq", "embed"))
+
+    def body(xc, lp):
+        h = rmsnorm(lp["attn_norm"], xc, eps=cfg.norm_eps)
+        y, _ = _mha(lp["attn"], h, cfg, causal=False, shard=shard)
+        xc = xc + y
+        h = rmsnorm(lp["ffn_norm"], xc, eps=cfg.norm_eps)
+        xc = xc + swiglu(lp["mlp"], h, shard=shard)
+        return shard(xc, ("batch", "seq_carry", "embed")), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_unit"])
+    return rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def precompute_cross_kv(params, memory, cfg: ArchConfig, *,
+                        shard=no_shard):
+    B, Se, d = memory.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+
+    def body(_, lp):
+        k = (memory @ lp["cross_attn"]["wk"]).reshape(B, Se, H, Dh)
+        v = (memory @ lp["cross_attn"]["wv"]).reshape(B, Se, H, Dh)
+        # cache layout sharding: batch over DP, sequence over model
+        k = shard(k, ("batch", "seq_carry", "cache_heads", "head_dim"))
+        v = shard(v, ("batch", "seq_carry", "cache_heads", "head_dim"))
+        return None, {"k": k, "v": v}
+
+    _, kv = jax.lax.scan(body, None, params["dec_unit"])
+    return kv                                            # (L,B,Se,H,Dh)
+
+
+def decode_forward(params, cfg: ArchConfig, tokens, *, memory=None,
+                   caches=None, pos=None, shard=no_shard,
+                   mode: str = "train", return_hidden: bool = False):
+    """Decoder stack. train: memory given, no caches. prefill: memory +
+    cache buffers. decode: caches only (cross K/V inside)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1]) if pos is None else None
+
+    def body(xc, xs):
+        lp = xs[0]
+        self_c = xs[1] if caches is not None else None
+        cross_c = xs[2] if caches is not None else None
+        h = rmsnorm(lp["self_norm"], xc, eps=cfg.norm_eps)
+        y, new_self = _mha(lp["self_attn"], h, cfg, causal=True,
+                           positions=positions, pos=pos, cache=self_c,
+                           shard=shard)
+        xc = xc + y
+        h = rmsnorm(lp["cross_norm"], xc, eps=cfg.norm_eps)
+        y, _ = _mha(lp["cross_attn"], h, cfg, kv=memory, causal=False,
+                    cache=cross_c, shard=shard)
+        xc = xc + y
+        h = rmsnorm(lp["ffn_norm"], xc, eps=cfg.norm_eps)
+        xc = xc + swiglu(lp["mlp"], h, shard=shard)
+        carry_axes = ("batch", "seq_carry", "embed") if caches is None \
+            else ("batch", "seq", "embed")
+        return shard(xc, carry_axes), new_self
+
+    if caches is None:
+        def body_nc(xc, lp):
+            return body(xc, (lp,))
+        fn = jax.checkpoint(body_nc) if mode == "train" else body_nc
+        x, _ = jax.lax.scan(fn, x, params["dec_unit"])
+        new_caches = None
+    else:
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_unit"], caches["self"], caches["cross"]))
+        new_caches = {"self": new_self, "cross": caches["cross"]}
+
+    x = rmsnorm(params["dec_norm"], x, eps=cfg.norm_eps)
+    if return_hidden:
+        return {"hidden": x, "head": params["lm_head"],
+                "caches": new_caches, "aux": jnp.zeros((), jnp.float32)}
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return {"logits": shard(logits, ("batch", "seq", "vocab")),
+            "caches": new_caches, "aux": jnp.zeros((), jnp.float32)}
+
+
+def init_encdec_caches(cfg: ArchConfig, batch: int, max_len: int,
+                       enc_len: int, dtype=jnp.bfloat16):
+    L, H, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_len, H, Dh), dtype),
+                 "v": jnp.zeros((L, batch, max_len, H, Dh), dtype)},
+        "cross": {"k": jnp.zeros((L, batch, enc_len, H, Dh), dtype),
+                  "v": jnp.zeros((L, batch, enc_len, H, Dh), dtype)},
+    }

@@ -1,0 +1,7 @@
+"""Neural-network layer library (pure functions + param pytrees).
+
+Every module exposes ``init_*(key, ...) -> params`` and a matching pure
+apply function.  No flax/haiku dependency: params are plain dicts so the
+dry-run can abstract-init them with jax.eval_shape and shard them with
+explicit PartitionSpecs (parallel/shardings.py).
+"""

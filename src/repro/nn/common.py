@@ -1,0 +1,43 @@
+"""Shared helpers: initializers, sharding hooks, dtype policy."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Sharder = Callable[[jnp.ndarray, tuple], jnp.ndarray]
+# sharder(x, logical_axes) -> x with a sharding constraint attached.
+
+
+def no_shard(x, logical_axes):
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    params: jnp.dtype = jnp.float32
+    compute: jnp.dtype = jnp.float32
+    logits: jnp.dtype = jnp.float32
+
+    @staticmethod
+    def bf16():
+        return DtypePolicy(params=jnp.bfloat16, compute=jnp.bfloat16,
+                           logits=jnp.float32)
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))

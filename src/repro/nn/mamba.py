@@ -1,0 +1,155 @@
+"""Mamba-1 selective SSM block (jamba's recurrent layer).
+
+Training uses a chunked parallel scan: the sequence is split into chunks;
+within a chunk the recurrence h_t = a_t * h_{t-1} + b_t is evaluated with an
+associative scan (materializing (B, chunk, d_inner, d_state) transiently,
+rematerialized in backward), and chunk boundary states are carried by an
+outer lax.scan.  This bounds live memory to O(B * chunk * d_inner * N) —
+the TPU-friendly adaptation of the CUDA fused scan (DESIGN.md §2).
+
+Decode is the O(1) recurrent update with a rolling conv buffer.
+State: {"conv": (B, k-1, d_inner), "ssm": (B, d_inner, d_state)}.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, no_shard, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0        # 0 => ceil(d_model/16)
+    chunk: int = 256
+
+    @property
+    def d_inner(self):
+        return self.expand * self.d_model
+
+    @property
+    def rank(self):
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba(key, cfg: MambaConfig, dtype=jnp.float32):
+    ks = split_keys(key, 7)
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dtype),
+        "dt_proj": dense_init(ks[3], (R, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))
+        ).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B,S,di); w: (k,di) depthwise. state: (B,k-1,di) prior inputs."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+k-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_state
+
+
+def _ssm_scan_chunked(dt, Bc, Cc, xb, A, h0, chunk: int):
+    """Fused selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    y_t = C_t . h_t — chunked over the sequence with the state tensor and
+    the (dt*A) discretization materialized ONE CHUNK AT A TIME (the
+    TPU-side equivalent of the fused CUDA scan; see module docstring).
+
+    dt, xb: (B,S,di); Bc, Cc: (B,S,N); A: (di,N); h0: (B,di,N).
+    Returns (y: (B,S,di) f32, h_final)."""
+    B, S, di = dt.shape
+    N = A.shape[1]
+    cs = min(chunk, S)
+    assert S % cs == 0, (S, cs)
+    n_chunks = S // cs
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_body(h, inp):
+        dtc, bcc, ccc, xbc = inp                       # (B, cs, ...)
+        da = jnp.exp(dtc[..., None] * A[None, None])   # (B,cs,di,N)
+        db = dtc[..., None] * bcc[:, :, None, :] * xbc[..., None]
+        aa, bb = jax.lax.associative_scan(op, (da, db), axis=1)
+        hs = aa * h[:, None] + bb                      # (B,cs,di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, ccc)
+        return hs[:, -1], y
+
+    def split(t):
+        return t.reshape(t.shape[0], n_chunks, cs, *t.shape[2:]) \
+            .transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    hF, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0,
+                          (split(dt), split(Bc), split(Cc), split(xb)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y, hF
+
+
+def mamba_forward(p, x, cfg: MambaConfig, *, state=None, shard=no_shard):
+    """x: (B,S,d). state None => training/prefill (returns final state when
+    a state dict is passed for prefill); decode when S==1 and state given."""
+    B, S, d = x.shape
+    di, N, R = cfg.d_inner, cfg.d_state, cfg.rank
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)                  # (B,S,di) each
+    xb = shard(xb, ("batch", "seq", "ffn"))
+
+    decode = state is not None and S == 1
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    xb = jax.nn.silu(xb)
+
+    proj = xb @ p["x_proj"]
+    dt, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])   # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di,N)
+
+    if decode:
+        da0 = jnp.exp(dt[:, 0, :, None] * A[None])            # (B,di,N)
+        db0 = dt[:, 0, :, None] * Bc[:, 0, None, :] * xb[:, 0, :, None]
+        h0 = state["ssm"]
+        h = da0 * h0 + db0                                    # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+        new_state = {"conv": new_conv, "ssm": h}
+    else:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        y, hF = _ssm_scan_chunked(dt.astype(jnp.float32),
+                                  Bc.astype(jnp.float32),
+                                  Cc.astype(jnp.float32),
+                                  xb.astype(jnp.float32), A, h0,
+                                  cfg.chunk)
+        new_state = {"conv": new_conv, "ssm": hF} \
+            if state is not None else None
+    y = y + xb * p["D"]
+    y = (y * jax.nn.silu(z)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    return shard(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mamba_state(cfg: MambaConfig, batch: int, dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), dtype)}

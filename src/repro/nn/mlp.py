@@ -1,0 +1,23 @@
+"""SwiGLU MLP (llama-family feed-forward)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, no_shard, split_keys
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = split_keys(key, 3)
+    return {
+        "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+        "wd": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x, *, shard=no_shard):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    h = shard(h, ("batch", "seq", "ffn"))
+    out = h @ p["wd"]
+    return shard(out, ("batch", "seq", "embed"))

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with sort-based dispatch (MegaBlocks/MaxText style).
+
+Routing is per sequence row (vmapped over batch), so the token sort never
+crosses a data shard — under pjit the dispatch stays local to each data-
+parallel shard and the only collective added by the MoE layer is the same
+all-reduce a tensor-parallel dense MLP needs (expert d_ff is TP-sharded on
+the ``model`` axis; ``expert`` axis sharding = EP is a config option explored
+in §Perf).
+
+Compute cost is ACTIVE-ONLY: tokens are gathered into (E, C, d) buffers
+(C = capacity) and hit one batched GEMM per projection; overflow tokens are
+dropped (standard capacity-factor semantics), and the auxiliary load-balance
+loss (Switch/GShard) discourages overflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, no_shard, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # deepseek-style always-on shared experts
+    shared_d_ff: int = 0       # hidden size of the fused shared expert
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = split_keys(key, 5)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wg": dense_init(ks[1], (E, d, f), dtype),
+        "wu": dense_init(ks[2], (E, d, f), dtype),
+        "wd": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if cfg.n_shared > 0:
+        sf = cfg.shared_d_ff or cfg.d_ff * cfg.n_shared
+        sks = split_keys(ks[4], 3)
+        p["shared"] = {
+            "wg": dense_init(sks[0], (d, sf), dtype),
+            "wu": dense_init(sks[1], (d, sf), dtype),
+            "wd": dense_init(sks[2], (sf, d), dtype),
+        }
+    return p
+
+
+def _dispatch_row(x_row, gate_idx, gate_w, E: int, C: int):
+    """Build gather indices for one sequence row.
+
+    x_row: (S, d); gate_idx/gate_w: (S, k). Returns
+    (slot_token: (E, C) int32 token ids or S (=dropped sentinel),
+     slot_gate:  (E, C) f32 combine weights).
+    """
+    S, k = gate_idx.shape
+    flat_e = gate_idx.reshape(-1)                       # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(S), k)               # token of each slot
+    flat_w = gate_w.reshape(-1)
+    # rank of each (token,expert) assignment within its expert, via a
+    # sort + segmented-position trick: O(S*k) memory (NOT (S*k, E) one-hot)
+    n = flat_e.shape[0]
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, pos, jnp.int32(0)))
+    rank_sorted = (pos - seg_start).astype(jnp.int32)
+    my_rank = jnp.zeros((n,), jnp.int32).at[sort_idx].set(rank_sorted)
+    keep = my_rank < C
+    slot = (flat_e.astype(jnp.int32) * C + my_rank)               # (S*k,)
+    slot = jnp.where(keep, slot, E * C)                           # overflow
+    slot_token = jnp.full((E * C + 1,), S, jnp.int32) \
+        .at[slot].set(jnp.where(keep, flat_t.astype(jnp.int32), S)) \
+        [:E * C]
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32) \
+        .at[slot].set(jnp.where(keep, flat_w.astype(jnp.float32),
+                                0.0))[:E * C]
+    return slot_token.reshape(E, C), slot_gate.reshape(E, C)
+
+
+def moe_ffn(p, x, cfg: MoEConfig, *, shard=no_shard):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(S * k * cfg.capacity_factor / E))
+
+    logits = (x.astype(jnp.float32) @ p["router"])       # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, k)           # (B,S,k)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, -1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (GShard/Switch) --------------------------
+    me = jnp.mean(probs, axis=(0, 1))                                  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))                                                   # (E,)
+    aux = (cfg.router_aux_weight * E * jnp.sum(me * ce)) \
+        .astype(jnp.float32)
+
+    slot_token, slot_gate = jax.vmap(
+        lambda xr, gi, gw: _dispatch_row(xr, gi, gw, E, C)
+    )(x, gate_idx, gate_w)                               # (B,E,C) each
+
+    # gather tokens (out-of-range id S clamps to row S-1, zero gate later);
+    # flat per-row gather — NEVER broadcasts x to (B, E, S, d)
+    ids = jnp.minimum(slot_token, S - 1).reshape(B, E * C)
+    xe = jax.vmap(lambda xb, ib: jnp.take(xb, ib, axis=0))(x, ids)
+    xe = xe.reshape(B, E, C, d)
+    xe = shard(xe, ("batch", "experts", None, "embed"))
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["wu"])
+    h = shard(h, ("batch", "experts", None, "ffn"))
+    ye = jnp.einsum("becf,efd->becd", h, p["wd"])        # (B,E,C,d)
+    ye = ye * slot_gate[..., None].astype(ye.dtype)
+
+    # scatter-add back to tokens
+    flat = ye.reshape(B, E * C, d)
+    ids = slot_token.reshape(B, E * C)
+    y = jnp.zeros((B, S + 1, d), flat.dtype)
+    y = jax.vmap(lambda yb, ib, fb: yb.at[ib].add(fb))(y, ids, flat)
+    y = y[:, :S]
+
+    if cfg.n_shared > 0:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["wg"]) * (x @ sp["wu"])
+        hs = shard(hs, ("batch", "seq", "ffn"))
+        y = y + hs @ sp["wd"]
+    return shard(y, ("batch", "seq", "embed")), aux

@@ -1,0 +1,27 @@
+"""RMSNorm (kernel-dispatched) and LayerNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps=1e-6, use_pallas=None):
+    return kops.rms_norm(x, p["w"], eps=eps, use_pallas=use_pallas)
+
+
+def init_layernorm(d, dtype=jnp.float32):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * p["w"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)

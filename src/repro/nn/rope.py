@@ -1,0 +1,33 @@
+"""Rotary position embeddings (full and partial)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               rotary_dim: int | None = None):
+    rd = rotary_dim if rotary_dim is not None else head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    return inv  # (rd/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freqs: jnp.ndarray,
+               rotary_dim: int | None = None) -> jnp.ndarray:
+    """x: (B, H, S, D); positions: (S,) or (B, S) absolute positions."""
+    D = x.shape[-1]
+    rd = rotary_dim if rotary_dim is not None else D
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * inv_freqs[None, :]
+        ang = ang[None, None]                     # (1,1,S,rd/2)
+    else:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * \
+            inv_freqs[None, None, None, :]        # (B,1,S,rd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    if rd < D:
+        rot = jnp.concatenate([rot, x[..., rd:].astype(jnp.float32)], -1)
+    return rot.astype(x.dtype)

@@ -1,0 +1,342 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM training uses the PARALLEL form from the xLSTM paper (App. A):
+decay logits l_{ts} = F_t - F_s + i_s with F = cumsum(log-sigmoid(f)),
+row-stabilized like flash attention — a quadratic masked attention with a
+gate-derived bias, which is why it maps well onto the TPU MXU.  Decode is
+the O(1) recurrence on the matrix state (C, n, m), which is what makes the
+long_500k cell linear-cost (DESIGN.md §Arch-applicability).
+
+sLSTM is inherently sequential (recurrent R per head); training scans over
+time with a rematerialized cell, decode is a single cell step.
+State layouts:
+  mLSTM: {"C": (B,H,dk,dv), "n": (B,H,dk), "m": (B,H)}
+  sLSTM: {"c","n","h": (B,H,dh), "m": (B,H,dh)}
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, no_shard, split_keys
+from .norm import init_layernorm, layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    m_proj_factor: float = 2.0     # mLSTM up-projection
+    s_proj_factor: float = 4.0 / 3.0
+    d_conv: int = 4
+    # training-time mLSTM evaluation: "chunkwise" (state-passing; wins
+    # when S >> dk so quadratic rows dominate) vs "parallel" (masked
+    # quadratic form; wins at moderate S because the (dk, dv) state ops
+    # and their saved carries cost more than recomputed logit blocks —
+    # measured in EXPERIMENTS.md §Perf Cell A).  "auto" switches on
+    # sequence length.
+    m_form: str = "auto"
+    m_chunk: int = 1024
+    m_chunkwise_min_s: int = 8192
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = split_keys(key, 9)
+    d = cfg.d_model
+    di = int(cfg.m_proj_factor * d)
+    H = cfg.n_heads
+    return {
+        "up": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, di), dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], (di, di), dtype),
+        "wk": dense_init(ks[3], (di, di), dtype),
+        "wv": dense_init(ks[4], (di, di), dtype),
+        "wi": dense_init(ks[5], (di, H), jnp.float32),
+        "wf": dense_init(ks[6], (di, H), jnp.float32),
+        "skip_norm": init_layernorm(di, dtype),
+        "down": dense_init(ks[7], (di, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) \
+        if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return out, (xp[:, -(k - 1):] if k > 1 else None)
+
+
+def mlstm_forward(p, x, cfg: XLSTMConfig, *, state=None, shard=no_shard):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = int(cfg.m_proj_factor * d)
+    dh = di // H
+
+    xz = x @ p["up"]
+    xb, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    cx, new_conv = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    cx = jax.nn.silu(cx)
+
+    def heads(t):
+        return t.reshape(B, S, H, dh).transpose(0, 2, 1, 3)  # (B,H,S,dh)
+
+    q = heads(cx @ p["wq"]) * dh ** -0.5
+    k = heads(cx @ p["wk"])
+    v = heads(xb @ p["wv"])
+    i_gate = (cx @ p["wi"]).transpose(0, 2, 1)               # (B,H,S) f32
+    f_gate = (cx @ p["wf"]).transpose(0, 2, 1)
+
+    decode = state is not None and S == 1
+    if decode:
+        C, n, m = state["C"], state["n"], state["m"]
+        logf = jax.nn.log_sigmoid(f_gate[..., 0])            # (B,H)
+        logi = i_gate[..., 0]
+        m_new = jnp.maximum(logf + m, logi)
+        fe = jnp.exp(logf + m - m_new)[..., None, None]
+        ie = jnp.exp(logi - m_new)[..., None, None]
+        kk, vv, qq = k[:, :, 0], v[:, :, 0], q[:, :, 0]      # (B,H,dh)
+        C = fe * C + ie * (kk[..., :, None] * vv[..., None, :])
+        n = fe[..., 0] * n + ie[..., 0] * kk
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qq)),
+                            jnp.exp(-m_new))[..., None]
+        y = jnp.einsum("bhd,bhdv->bhv", qq, C) / denom       # (B,H,dv)
+        y = y[:, :, None]                                    # (B,H,1,dh)
+        new_state = {"conv": new_conv, "C": C, "n": n, "m": m_new}
+    elif (cfg.m_form == "chunkwise"
+          or (cfg.m_form == "auto" and S >= cfg.m_chunkwise_min_s)) and \
+            S % cfg.m_chunk == 0 and S > cfg.m_chunk:
+        y, last_state = _mlstm_chunkwise(q, k, v, i_gate, f_gate,
+                                         cfg.m_chunk)
+        new_state = None
+        if state is not None:
+            C, n, m = last_state
+            new_state = {"conv": new_conv, "C": C, "n": n, "m": m}
+    else:
+        logf = jax.nn.log_sigmoid(f_gate)                    # (B,H,S)
+        F = jnp.cumsum(logf, axis=-1)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        spos = jnp.arange(S)[None, :]
+        bq = 256 if S % 256 == 0 and S > 256 else S
+        nb = S // bq
+        qb = q.astype(jnp.float32).reshape(B, H, nb, bq, dh) \
+            .transpose(2, 0, 1, 3, 4)
+        Fb = F.reshape(B, H, nb, bq).transpose(2, 0, 1, 3)
+
+        @jax.checkpoint
+        def one_block(args):
+            # per-row normalization is independent, so query-blocking is
+            # exact; peak live is (bq, S) per (batch, head).
+            qi, Fi, i = args
+            lts = Fi[..., :, None] - F[..., None, :] + \
+                i_gate[..., None, :]                         # (B,H,bq,S)
+            tpos = (i * bq + jnp.arange(bq))[:, None]
+            lts = jnp.where(spos[None, None] <= tpos[None, None],
+                            lts, -jnp.inf)
+            m_row = jnp.max(lts, axis=-1, keepdims=True)
+            m_row = jnp.where(jnp.isfinite(m_row), m_row, 0.0)
+            Dmat = jnp.exp(lts - m_row)
+            Smat = jnp.einsum("bhtd,bhsd->bhts", qi, kf) * Dmat
+            denom = jnp.maximum(jnp.abs(jnp.sum(Smat, -1, keepdims=True)),
+                                jnp.exp(-m_row))
+            return jnp.einsum("bhts,bhsv->bhtv", Smat / denom, vf)
+
+        def bodyfn(_, args):
+            return None, one_block(args)
+
+        _, yb = jax.lax.scan(bodyfn, None, (qb, Fb, jnp.arange(nb)))
+        y = yb.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh) \
+            .astype(x.dtype)
+        new_state = None
+        if state is not None:   # prefill: also produce the recurrent state
+            ie_all = jnp.exp(i_gate + (F[..., -1:] - F))     # (B,H,S)
+            m_fin = jnp.max(i_gate + (F[..., -1:] - F), axis=-1)
+            ie_all = jnp.exp(i_gate + (F[..., -1:] - F) - m_fin[..., None])
+            C = jnp.einsum("bhs,bhsd,bhsv->bhdv", ie_all,
+                           k.astype(jnp.float32), v.astype(jnp.float32))
+            n = jnp.einsum("bhs,bhsd->bhd", ie_all, k.astype(jnp.float32))
+            new_state = {"conv": new_conv, "C": C, "n": n, "m": m_fin}
+
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di).astype(x.dtype)
+    y = layernorm(p["skip_norm"], y) + cx        # gated skip (xLSTM style)
+    y = y * jax.nn.silu(z)
+    out = y @ p["down"]
+    return shard(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mlstm_state(cfg: XLSTMConfig, batch: int, dtype=jnp.float32):
+    di = int(cfg.m_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return {"conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+            "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def _mlstm_chunkwise(q, k, v, i_gate, f_gate, Q: int):
+    """Chunkwise-recurrent mLSTM (xLSTM App. A), numerically identical to
+    the parallel form (tests assert allclose).
+
+    q,k,v: (B,H,S,dh) (q pre-scaled); i_gate,f_gate: (B,H,S) f32.
+    Sequence is split into S/Q chunks; within a chunk the masked quadratic
+    form runs on (Q,Q) logits; across chunks a stabilized matrix state
+    (C, n, m) carries the history:
+
+        C_prev = sum_{s<start} exp(F_start - F_s + i_s - m_prev) k_s v_s^T
+
+    FLOPs per token drop from O(2*S*dh) to O(2*Q*dh + 2*dk*dv/... state
+    read+write amortized): the §Perf Cell-A optimization.
+    Returns (y: (B,H,S,dh), (C,n,m) final carry)."""
+    B, H, S, dh = q.shape
+    nc = S // Q
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+
+    def split(t):
+        return t.reshape(t.shape[0], t.shape[1], nc, Q, *t.shape[3:]) \
+            .transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    qs, ks, vs = split(qf), split(kf), split(vf)         # (nc,B,H,Q,dh)
+    is_, fs = split(i_gate.astype(jnp.float32)), split(logf)  # (nc,B,H,Q)
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        C, n, m = carry                                   # (B,H,dk,dv) ...
+        qc, kc, vc, ic, fc = inp
+        b = jnp.cumsum(fc, axis=-1)                       # (B,H,Q)
+        Btot = b[..., -1:]
+        # intra-chunk logits l_ts = b_t - b_s + i_s  (s <= t)
+        lts = b[..., :, None] - b[..., None, :] + ic[..., None, :]
+        lts = jnp.where(mask, lts, -jnp.inf)
+        m_intra = jnp.max(lts, axis=-1)                   # (B,H,Q)
+        m_inter = b + m[..., None]                        # (B,H,Q)
+        m_t = jnp.maximum(m_inter, m_intra)
+        m_t = jnp.where(jnp.isfinite(m_t), m_t, 0.0)
+        D = jnp.exp(lts - m_t[..., None])
+        Smat = jnp.einsum("bhtd,bhsd->bhts", qc, kc) * D
+        w_inter = jnp.exp(m_inter - m_t)                  # (B,H,Q)
+        h = jnp.einsum("bhts,bhsv->bhtv", Smat, vc) + \
+            w_inter[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qc, C)
+        den = jnp.sum(Smat, axis=-1) + \
+            w_inter * jnp.einsum("bhtd,bhd->bht", qc, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = h / den[..., None]
+        # carry update relative to chunk end
+        dec = Btot - b + ic                               # (B,H,Q)
+        m_new = jnp.maximum(Btot[..., 0] + m, jnp.max(dec, axis=-1))
+        wk = jnp.exp(dec - m_new[..., None])              # (B,H,Q)
+        wC = jnp.exp(Btot[..., 0] + m - m_new)[..., None, None]
+        C = wC * C + jnp.einsum("bhs,bhsd,bhsv->bhdv", wk, kc, vc)
+        n = wC[..., 0] * n + jnp.einsum("bhs,bhsd->bhd", wk, kc)
+        return (C, n, m_new), y
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    (C, n, m), ys = jax.lax.scan(chunk, (C0, n0, m0),
+                                 (qs, ks, vs, is_, fs))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, dh).astype(q.dtype)
+    return y, (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: XLSTMConfig, dtype=jnp.float32):
+    ks = split_keys(key, 7)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    # round the up-projection to a multiple of 128 (TPU lane width and
+    # TP-shardability over a 16-way model axis)
+    df = max(128, -(-int(cfg.s_proj_factor * d) // 128) * 128)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d), dtype),       # i,f,z,o pre-acts
+        "r": dense_init(ks[1], (H, dh, 4 * dh), jnp.float32),  # recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "up1": dense_init(ks[2], (d, df), dtype),
+        "up2": dense_init(ks[3], (d, df), dtype),
+        "down": dense_init(ks[4], (df, d), dtype),
+        "out_norm": init_layernorm(d, dtype),
+    }
+
+
+def _slstm_cell(p, xt, st, H, dh):
+    """One sLSTM time step. xt: (B, 4d) pre-activations from input."""
+    c, n, h, m = st["c"], st["n"], st["h"], st["m"]       # (B,H,dh)
+    rec = jnp.einsum("bhd,hdk->bhk", h, p["r"])           # (B,H,4dh)
+    pre = xt.reshape(xt.shape[0], H, 4 * dh) + rec + \
+        p["b"].reshape(H, 4 * dh)
+    i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)           # (B,H,dh)
+    logf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(logf + m, i_)
+    ie = jnp.exp(i_ - m_new)
+    fe = jnp.exp(logf + m - m_new)
+    c = fe * c + ie * jnp.tanh(z_)
+    n = jnp.maximum(fe * n + ie, 1e-6)
+    h = jax.nn.sigmoid(o_) * c / n
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p, x, cfg: XLSTMConfig, *, state=None, shard=no_shard):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xw = (x @ p["wx"]).astype(jnp.float32)                # (B,S,4d)
+
+    if state is None:
+        st0 = init_slstm_state(cfg, B)
+    else:
+        st0 = {k: v for k, v in state.items()}
+
+    if S == 1 and state is not None:
+        st = _slstm_cell(p, xw[:, 0], st0, H, dh)
+        hs = st["h"][:, None]                             # (B,1,H,dh)
+        new_state = st
+    else:
+        def step(st, xt):
+            st = _slstm_cell(p, xt, st, H, dh)
+            return st, st["h"]
+
+        # two-level time scan: the outer (chunk) scan saves carries only
+        # at chunk boundaries and remats the inner steps — without this,
+        # backward retains the 4-tuple cell state at EVERY timestep
+        # (the xlstm train_4k memory driver found in §Perf Cell A)
+        cs = 256 if S % 256 == 0 and S > 256 else S
+        nc = S // cs
+        xw_c = xw.transpose(1, 0, 2).reshape(nc, cs, B, xw.shape[-1])
+
+        @jax.checkpoint
+        def chunk(st, xc):
+            return jax.lax.scan(step, st, xc)
+
+        st, hs = jax.lax.scan(chunk, st0, xw_c)
+        hs = hs.reshape(S, B, H, dh).transpose(1, 0, 2, 3)  # (B,S,H,dh)
+        new_state = st if state is not None else None
+
+    y = hs.reshape(B, -1, d).astype(x.dtype)
+    y = layernorm(p["out_norm"], y)
+    y = (jax.nn.gelu(y @ p["up1"]) * (y @ p["up2"])) @ p["down"]
+    return shard(y, ("batch", "seq", "embed")), new_state
+
+
+def init_slstm_state(cfg: XLSTMConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z}

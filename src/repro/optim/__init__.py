@@ -1,0 +1,8 @@
+from .adamw import adamw_init, adamw_update, AdamWConfig
+from .schedules import cosine_schedule, wsd_schedule, constant_schedule
+from .clip import clip_by_global_norm
+from .compress import compress_grads, decompress_grads, CompressionConfig
+
+__all__ = ["adamw_init", "adamw_update", "AdamWConfig", "cosine_schedule",
+           "wsd_schedule", "constant_schedule", "clip_by_global_norm",
+           "compress_grads", "decompress_grads", "CompressionConfig"]

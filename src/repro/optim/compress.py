@@ -1,0 +1,76 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two modes, applied to the gradient pytree BEFORE the optimizer (i.e. before
+the pjit-inserted DP all-reduce in the real deployment; on the roofline this
+halves/quarters the dominant cross-pod collective bytes):
+
+  * "bf16": cast grads to bfloat16 (2x reduction, no state).
+  * "int8": per-tensor symmetric int8 quantization with error feedback —
+    the residual is carried in the optimizer state and re-added next step,
+    preserving convergence (1-bit-Adam-style argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    mode: str = "none"           # none | bf16 | int8
+    error_feedback: bool = True
+
+
+def init_error_state(params, cfg: CompressionConfig):
+    if cfg.mode == "int8" and cfg.error_feedback:
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return None
+
+
+def compress_grads(grads, cfg: CompressionConfig, error_state=None):
+    """Returns (compressed_repr, new_error_state)."""
+    if cfg.mode == "none":
+        return grads, error_state
+    if cfg.mode == "bf16":
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.bfloat16), grads), error_state
+    if cfg.mode == "int8":
+        def q(g, e):
+            g32 = g.astype(jnp.float32) + (e if e is not None else 0.0)
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+            qi = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            err = g32 - qi.astype(jnp.float32) * scale
+            return (qi, scale), err
+
+        if error_state is None:
+            error_state = jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_e = jax.tree_util.tree_leaves(error_state)
+        qs, errs = [], []
+        for g, e in zip(leaves_g, leaves_e):
+            qq, err = q(g, e)
+            qs.append(qq)
+            errs.append(err)
+        return treedef.unflatten(qs), treedef.unflatten(errs)
+    raise ValueError(cfg.mode)
+
+
+def decompress_grads(comp, cfg: CompressionConfig, like=None):
+    if cfg.mode == "none":
+        return comp
+    if cfg.mode == "bf16":
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), comp)
+    if cfg.mode == "int8":
+        def dq(t):
+            qi, scale = t
+            return qi.astype(jnp.float32) * scale
+        return jax.tree_util.tree_map(
+            dq, comp, is_leaf=lambda x: isinstance(x, tuple)
+            and len(x) == 2 and hasattr(x[0], "dtype"))
+    raise ValueError(cfg.mode)

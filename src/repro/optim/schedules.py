@@ -1,0 +1,36 @@
+"""LR schedules: cosine, constant, and WSD (Warmup-Stable-Decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def cosine_schedule(lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * \
+            0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def wsd_schedule(lr: float, warmup: int, stable: int, decay: int,
+                 final_frac: float = 0.01):
+    """MiniCPM's Warmup-Stable-Decay: linear warmup, flat plateau, then
+    exponential-style decay over ``decay`` steps."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = lr * (final_frac ** prog)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, lr, dec))
+    return fn

@@ -1,0 +1,5 @@
+from .mesh_rules import LOGICAL_RULES, make_sharder
+from .shardings import batch_specs, cache_specs, param_specs, state_specs
+
+__all__ = ["LOGICAL_RULES", "make_sharder", "param_specs", "state_specs",
+           "batch_specs", "cache_specs"]

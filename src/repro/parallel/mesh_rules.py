@@ -1,0 +1,78 @@
+"""Logical-axis -> mesh-axis rules and the activation sharding hook.
+
+The production mesh axes are ("pod", "data", "model") (multi-pod) or
+("data", "model") (single pod).  Tensor parallelism ("model") stays inside a
+pod; data parallelism spans ("pod", "data") so cross-pod traffic is only the
+gradient all-reduce (DCN-tolerant), per DESIGN.md §7.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical activation axis -> mesh axis (resolved against the live mesh)
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # layer-boundary residual stream (the scan carry whose per-layer values
+    # are SAVED for backward): sequence-sharded over "model" so activation
+    # checkpoints take 1/TP of the memory (Korthikanti-style sequence
+    # parallelism; XLA turns the TP all-reduce into reduce-scatter +
+    # all-gather, same bytes).
+    "seq_carry": "model",
+    "kv_seq": "data",        # long-context decode: shard cache sequence
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "embed": None,
+    "ffn": "model",
+    "experts": None,          # expert weights are TP-sharded on d_ff by
+    "vocab": "model",         # default; EP (experts->model) is a config knob
+}
+
+
+def _resolve(axis_entry, mesh):
+    if axis_entry is None:
+        return None
+    if isinstance(axis_entry, tuple):
+        live = tuple(a for a in axis_entry if a in mesh.axis_names)
+        return live if live else None
+    return axis_entry if axis_entry in mesh.axis_names else None
+
+
+def make_sharder(mesh: Optional[jax.sharding.Mesh], rules=None,
+                 overrides: Optional[dict] = None):
+    """Returns shard(x, logical_axes) applying with_sharding_constraint.
+
+    ``overrides`` lets a launch site retarget logical axes per shape cell
+    (e.g. {"seq": "model"} for sequence-parallel activations, or
+    {"batch": None, "kv_seq": "data"} for batch-1 long-context decode).
+    """
+    if mesh is None:
+        return lambda x, axes: x
+    rules = dict(rules or LOGICAL_RULES)
+    if overrides:
+        rules.update(overrides)
+
+    def shard(x, axes):
+        if x.ndim != len(axes):
+            return x
+        entries = []
+        for dim, a in zip(x.shape, axes):
+            e = _resolve(rules.get(a), mesh)
+            if e is not None:
+                size = (mesh.shape[e] if isinstance(e, str)
+                        else int(np.prod([mesh.shape[n] for n in e])))
+                # never constrain a non-divisible dim (XLA would pad or
+                # involuntarily rematerialize)
+                if dim % size != 0 or dim < size:
+                    e = None
+            entries.append(e)
+        spec = P(*entries)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return shard

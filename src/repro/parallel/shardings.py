@@ -1,0 +1,230 @@
+"""PartitionSpec assignment for params, optimizer state, batches and caches.
+
+Param specs are derived from leaf names (path-based rules), giving megatron-
+style tensor parallelism:
+
+  column-parallel (shard OUT dim on "model"): wq wk wv wg wu up in_proj
+      x_proj wuk wuv frontend up1 up2 lm_head
+  row-parallel    (shard IN dim on "model"):  wo wd down out_proj dt_proj
+  embed (vocab, d): vocab on "model"
+  MoE expert banks (E, d, f)/(E, f, d): shard f on "model" (TP-in-expert);
+      set ``ep=True`` to shard E instead (expert parallelism).
+  everything else (norms, gates, biases, scalars, ssm params): replicated.
+
+Optimizer state: same spec as its param; with ``zero1=True`` the f32 m/v/
+master leaves are additionally sharded over "data" on the first dimension
+that is unsharded and divisible (ZeRO-1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+COL_NAMES = {"wq", "wk", "wv", "wg", "wu", "up", "in_proj", "x_proj",
+             "wuk", "wuv", "frontend", "up1", "up2", "lm_head", "wx",
+             "wt_gate", "wt_bias", "fc1", "fc2"}
+ROW_NAMES = {"wo", "wd", "down", "out_proj", "dt_proj"}
+REPLICATED = {"router", "conv_w", "conv_b", "dt_bias", "A_log", "D", "r",
+              "b", "w", "b1", "b2", "wi", "wf", "conv_b"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _path_names(path):
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(str(entry.key))
+    return out
+
+
+def _spec_for(path, leaf, mesh, ep: bool, fsdp: bool = False,
+              extra_replicated=frozenset()) -> P:
+    name = _leaf_name(path)
+    if name in extra_replicated:
+        return P(*([None] * np.ndim(leaf)))
+    names = _path_names(path)
+    shape = np.shape(leaf)
+    ndim = len(shape)
+    model_ok = "model" in mesh.axis_names
+    m = "model" if model_ok else None
+    if ndim == 0 or m is None:
+        return P()
+    msize = mesh.shape["model"]
+    in_moe = "moe" in names or name == "shared"
+    stacked = names and names[0] in ("unit", "enc_unit", "dec_unit")
+    off = 1 if stacked else 0   # leading layer-stack dim from vmap'd init
+
+    def pad(spec_tail):
+        entries = [None] * off + list(spec_tail)
+        # drop any axis assignment whose dim is not divisible
+        for i, e in enumerate(entries):
+            if e is not None and (shape[i] % msize != 0
+                                  or shape[i] < msize):
+                entries[i] = None
+        if fsdp and "data" in mesh.axis_names:
+            # FSDP: additionally shard one weight dim over "data"; XLA
+            # all-gathers per layer inside the scan (weight-gathering
+            # FSDP).  Never the layer-stack dim (off..), and only large
+            # tensors — small norms/gates stay replicated.
+            dsize = mesh.shape["data"]
+            nelems = 1
+            for s in shape:
+                nelems *= s
+            if nelems >= (1 << 20):
+                for i in range(off, len(entries)):
+                    if entries[i] is None and shape[i] % dsize == 0 \
+                            and shape[i] >= dsize:
+                        entries[i] = "data"
+                        break
+        return P(*entries)
+
+    eff = ndim - off
+    if name == "embed" and eff == 2:
+        return pad([m, None])
+    if in_moe and eff == 3:          # (E, d, f) or (E, f, d) expert banks
+        if ep:
+            return pad([m, None, None])
+        if name in ("wg", "wu"):
+            return pad([None, None, m])
+        if name == "wd":
+            return pad([None, m, None])
+        return pad([None] * 3)
+    if name in COL_NAMES and eff >= 2:
+        return pad([None] * (eff - 1) + [m])
+    if name in ROW_NAMES and eff >= 2:
+        return pad([m] + [None] * (eff - 1))
+    return pad([None] * (ndim - off))
+
+
+def param_specs(params, mesh, *, ep: bool = False, fsdp: bool = False,
+                extra_replicated=frozenset()):
+    """Tree of PartitionSpec matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh, ep, fsdp,
+                                     extra_replicated), params)
+
+
+def _zero1_spec(spec: P, shape, mesh) -> P:
+    if "data" not in mesh.axis_names:
+        return spec
+    dsize = mesh.shape["data"]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for e in entries:  # FSDP already consumed the data axis
+        if e == "data" or (isinstance(e, tuple) and "data" in e):
+            return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = "data"
+            return P(*entries)
+    return spec
+
+
+def state_specs(state, mesh, *, ep: bool = False, zero1: bool = True,
+                fsdp: bool = False):
+    """Specs for the full train state {"params", "opt", ...}."""
+    pspecs = param_specs(state["params"], mesh, ep=ep, fsdp=fsdp)
+    out = {"params": pspecs}
+    opt = {}
+    for k in state["opt"]:
+        if k == "step":
+            opt["step"] = P()
+            continue
+        base = jax.tree_util.tree_map(lambda s: s, pspecs)
+        if zero1:
+            base = jax.tree_util.tree_map(
+                lambda spec, leaf: _zero1_spec(spec, np.shape(leaf), mesh),
+                base, state["opt"][k])
+        opt[k] = base
+    out["opt"] = opt
+    if "compress_err" in state:
+        out["compress_err"] = jax.tree_util.tree_map(
+            lambda s: s, pspecs)
+    return out
+
+
+def batch_specs(batch, mesh):
+    """Shard every batch leaf's leading (batch) dim over (pod, data)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(leaf):
+        nd = np.ndim(leaf)
+        if nd == 0:
+            return P()
+        if np.shape(leaf)[0] % int(np.prod([mesh.shape[a] for a in dp])) \
+                != 0:
+            return P(*([None] * nd))
+        return P(dp, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(caches, mesh, *, batch_size: int):
+    """KV-cache / SSM-state sharding for serving.
+
+    * batch dim -> (pod, data) when divisible;
+    * the cache SEQUENCE dim (the huge one) -> "model": decode attention
+      against a sequence-sharded cache lowers to partial-softmax + small
+      LSE/value all-reduces — the flash-decoding layout, emitted by SPMD;
+    * when batch=1 (long_500k) the sequence takes BOTH ("data","model") (or
+      as much as divides), and SSM/mLSTM feature states shard over the
+      spare axes instead (they have no sequence dim).
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    msize = mesh.shape.get("model", 1)
+    batch_sharded = batch_size % dp_size == 0 and batch_size >= dp_size
+
+    def spec(path, leaf):
+        shape = np.shape(leaf)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        entries = [None] * nd
+        b_idx = 0 if shape[0] == batch_size else \
+            (1 if nd > 1 and shape[1] == batch_size else None)
+        if b_idx is None:
+            return P(*entries)
+        if batch_sharded:
+            entries[b_idx] = dp
+        rest = list(range(b_idx + 1, nd))
+        # "sequence-like" dim: the first big trailing dim (>= 1024)
+        seq_idx = next((i for i in rest if shape[i] >= 1024), None)
+        if seq_idx is not None:
+            if batch_sharded:
+                if shape[seq_idx] % msize == 0:
+                    entries[seq_idx] = "model"
+            else:
+                full = dp + ("model",)
+                fsize = dp_size * msize
+                if shape[seq_idx] % fsize == 0:
+                    entries[seq_idx] = full
+                elif shape[seq_idx] % msize == 0:
+                    entries[seq_idx] = "model"
+            return P(*entries)
+        # stateful (SSM / mLSTM) leaves: no sequence dim — shard features
+        cands = sorted(rest, key=lambda i: -shape[i])
+        for i in cands:
+            if entries[i] is None and shape[i] % msize == 0 and \
+                    shape[i] >= msize:
+                entries[i] = "model"
+                break
+        if not batch_sharded and dp:
+            for i in cands:
+                if entries[i] is None and shape[i] % dp_size == 0 and \
+                        shape[i] >= dp_size:
+                    entries[i] = dp
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)

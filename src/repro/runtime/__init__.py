@@ -1,0 +1,6 @@
+from .checkpoint import Checkpointer
+from .elastic import reshard_state
+from .failures import RetryConfig, run_with_retries
+
+__all__ = ["Checkpointer", "reshard_state", "RetryConfig",
+           "run_with_retries"]

@@ -1,0 +1,23 @@
+"""Elastic restart: reshard a train state onto a different mesh.
+
+Checkpoints store full logical arrays, so elasticity reduces to device_put
+with the new mesh's shardings.  ``reshard_state`` also handles LIVE state
+(e.g. shrinking from 512 to 256 chips after a pod loss): jax.device_put on
+committed arrays performs the resharding collectives.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+
+
+def reshard_state(state: Any, mesh, specs: Any):
+    """Move/reshard every leaf of ``state`` to ``mesh`` per ``specs``."""
+    def put(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(
+        put, state, specs,
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

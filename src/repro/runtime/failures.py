@@ -1,0 +1,45 @@
+"""Failure handling: bounded retry around the train step + straggler notes.
+
+On a real TPU fleet the failure modes are (a) preempted/failed hosts -> the
+coordinator restarts the slice and every worker resumes from the newest
+valid checkpoint (launch/train.py does exactly that on boot), (b) transient
+collective timeouts -> bounded retry below, (c) stragglers -> mitigated
+structurally: synchronous data parallelism with per-pod TP means a slow
+chip only stalls its own all-reduce; the launcher sets XLA's
+latency-hiding-scheduler + collective-timeout flags, and the data pipeline
+is keyed by (step, host) so any restart replays identical batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+log = logging.getLogger("repro.failures")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryConfig:
+    max_retries: int = 3
+    backoff_s: float = 1.0
+    retryable: tuple = (RuntimeError,)
+
+
+def run_with_retries(fn: Callable, cfg: RetryConfig = RetryConfig(),
+                     on_failure: Callable = None):
+    """Run fn(); on a retryable error call on_failure() (e.g. restore from
+    checkpoint) and retry with backoff.  Raises after max_retries."""
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except cfg.retryable as e:  # pragma: no cover - exercised in tests
+            attempt += 1
+            if attempt > cfg.max_retries:
+                raise
+            log.warning("step failed (%s); retry %d/%d", e, attempt,
+                        cfg.max_retries)
+            if on_failure is not None:
+                on_failure()
+            time.sleep(cfg.backoff_s * attempt)

@@ -1,0 +1,6 @@
+from .losses import lm_loss
+from .train_step import TrainConfig, make_train_step, init_train_state
+from .serve_step import make_prefill_step, make_decode_step
+
+__all__ = ["lm_loss", "TrainConfig", "make_train_step", "init_train_state",
+           "make_prefill_step", "make_decode_step"]

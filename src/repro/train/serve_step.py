@@ -1,0 +1,69 @@
+"""Serving steps: prefill (build caches, return last logits) and decode
+(one token against the cache).  Covers decoder LMs, the VLM (visual prefix
+in the cache) and the enc-dec model (encoder memory + cross-KV precompute).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import (decode_forward, encode, init_encdec_caches,
+                                 precompute_cross_kv)
+from repro.models.lm import init_caches, lm_forward
+from repro.nn.common import no_shard
+
+
+def make_prefill_step(arch: ArchConfig, batch: int, max_len: int,
+                      shard=no_shard, cache_dtype=jnp.bfloat16,
+                      cache_constraint=None):
+    """``cache_constraint`` (optional): pytree hook that pins the freshly
+    created cache buffers to their serving sharding — without it the
+    in-graph zeros can materialize replicated before the layer scan."""
+    cc = cache_constraint or (lambda c: c)
+    if arch.encdec:
+        def prefill(params, batch_inputs):
+            frames = batch_inputs["frames"]
+            tokens = batch_inputs["tokens"]
+            memory = encode(params, frames, arch, shard=shard)
+            caches = cc(init_encdec_caches(arch, batch, max_len,
+                                           frames.shape[1], cache_dtype))
+            cross = precompute_cross_kv(params, memory, arch, shard=shard)
+            caches = {"self": caches["self"],
+                      "cross": jax.tree_util.tree_map(
+                          lambda b, v: v.astype(b.dtype), caches["cross"],
+                          cross)}
+            out = decode_forward(params, arch, tokens, memory=memory,
+                                 caches=caches, shard=shard,
+                                 mode="prefill", return_hidden=True)
+            # head applied to the LAST position only — never materialize
+            # the (B, S, V) prefill logits
+            logits = (out["hidden"][:, -1:] @ out["head"]) \
+                .astype(jnp.float32)
+            return logits, out["caches"]
+        return prefill
+
+    def prefill(params, batch_inputs):
+        caches = cc(init_caches(arch, batch, max_len, cache_dtype))
+        out = lm_forward(params, arch, batch_inputs["tokens"],
+                         caches=caches,
+                         extra_embeds=batch_inputs.get("patch_embeds"),
+                         shard=shard, mode="prefill", return_hidden=True)
+        logits = (out["hidden"][:, -1:] @ out["head"]).astype(jnp.float32)
+        return logits, out["caches"]
+    return prefill
+
+
+def make_decode_step(arch: ArchConfig, shard=no_shard):
+    if arch.encdec:
+        def decode(params, caches, token, pos):
+            out = decode_forward(params, arch, token, caches=caches,
+                                 pos=pos, shard=shard, mode="decode")
+            return out["logits"], out["caches"]
+        return decode
+
+    def decode(params, caches, token, pos):
+        out = lm_forward(params, arch, token, caches=caches, pos=pos,
+                         shard=shard, mode="decode")
+        return out["logits"], out["caches"]
+    return decode

@@ -1,0 +1,150 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Shape/dtype sweeps (parametrized + hypothesis) with assert_allclose per the
+deliverable spec.  All Pallas execution uses interpret=True (CPU container).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.butcher_combine import butcher_combine_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rms_norm_pallas
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+# --- butcher_combine ---------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape,s", [((64,), 4), ((33, 7), 7),
+                                     ((4, 128, 128), 13), ((1,), 1),
+                                     ((1024,), 6)])
+def test_butcher_combine_matches_ref(shape, s, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = _rand(keys[0], shape, dtype)
+    ks = _rand(keys[1], (s,) + shape, dtype)
+    coefs = jax.random.normal(keys[2], (s,), dtype=jnp.float32)
+    h = jnp.float32(0.125)
+    got = butcher_combine_pallas(x, ks, coefs, h, interpret=True)
+    want = ref.butcher_combine_ref(x, ks, coefs, h)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 700), s=st.integers(1, 13),
+       block_rows=st.sampled_from([8, 64, 256]))
+def test_butcher_combine_property(n, s, block_rows):
+    keys = jax.random.split(jax.random.PRNGKey(n * 31 + s), 3)
+    x = _rand(keys[0], (n,), jnp.float32)
+    ks = _rand(keys[1], (s, n), jnp.float32)
+    coefs = jax.random.normal(keys[2], (s,))
+    h = jnp.float32(0.01)
+    got = butcher_combine_pallas(x, ks, coefs, h, block_rows=block_rows,
+                                 interpret=True)
+    want = ref.butcher_combine_ref(x, ks, coefs, h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# --- rms_norm ----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 256), (3, 5, 128), (1, 1024),
+                                   (130, 384)])
+@pytest.mark.parametrize("with_residual", [False, True])
+def test_rms_norm_matches_ref(shape, dtype, with_residual):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = _rand(keys[0], shape, dtype)
+    w = _rand(keys[1], (shape[-1],), jnp.float32)
+    res = _rand(keys[2], shape, dtype) if with_residual else None
+    got = rms_norm_pallas(x, w, res, interpret=True)
+    want = ref.rms_norm_ref(x, w, res)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 300), d=st.sampled_from([128, 256, 512]),
+       block_rows=st.sampled_from([8, 128]))
+def test_rms_norm_property(rows, d, block_rows):
+    keys = jax.random.split(jax.random.PRNGKey(rows * 7 + d), 2)
+    x = _rand(keys[0], (rows, d), jnp.float32)
+    w = _rand(keys[1], (d,), jnp.float32)
+    got = rms_norm_pallas(x, w, block_rows=block_rows, interpret=True)
+    want = ref.rms_norm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- flash attention ---------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, H, Hkv, Sq, Sk, D, causal, window, q_offset)
+    (1, 4, 4, 128, 128, 64, True, None, 0),     # MHA causal
+    (2, 8, 2, 256, 256, 64, True, None, 0),     # GQA causal
+    (1, 4, 1, 128, 128, 128, True, 64, 0),      # MQA + sliding window
+    (1, 4, 2, 100, 100, 64, True, None, 0),     # ragged (padding path)
+    (2, 8, 4, 1, 512, 64, True, None, 511),     # decode: 1 query vs cache
+    (1, 4, 4, 64, 256, 64, True, None, 192),    # chunked prefill offset
+    (1, 4, 4, 128, 128, 64, False, None, 0),    # non-causal (encoder)
+    (1, 16, 8, 1, 300, 64, True, 128, 299),     # decode + SWA, ragged cache
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_ref(case, dtype):
+    B, H, Hkv, Sq, Sk, D, causal, window, q_offset = case
+    keys = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = _rand(keys[0], (B, H, Sq, D), dtype)
+    k = _rand(keys[1], (B, Hkv, Sk, D), dtype)
+    v = _rand(keys[2], (B, Hkv, Sk, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, block_q=64, block_k=64,
+                                 interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("block_q,block_k", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(block_q, block_k):
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(keys[0], (1, 4, 200, 64), jnp.float32)
+    k = _rand(keys[1], (1, 2, 200, 64), jnp.float32)
+    v = _rand(keys[2], (1, 2, 200, 64), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=block_q,
+                                 block_k=block_k, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_swa_equals_full_when_window_covers():
+    """window >= Sk must equal unwindowed attention."""
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(keys[0], (1, 2, 64, 32), jnp.float32)
+    k = _rand(keys[1], (1, 2, 64, 32), jnp.float32)
+    v = _rand(keys[2], (1, 2, 64, 32), jnp.float32)
+    a = flash_attention_pallas(q, k, v, causal=True, window=4096,
+                               block_q=32, block_k=32, interpret=True)
+    b = flash_attention_pallas(q, k, v, causal=True, window=None,
+                               block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-6)
