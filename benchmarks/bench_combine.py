@@ -1,0 +1,104 @@
+"""Fused vs unfused RK stage combination (the tentpole's HBM-pass claim).
+
+The stage combination x + h*sum_i c_i k_i is memory-bound: ~s FLOPs per
+element against (s+2)*4 bytes moved.  Three implementations of the dopri5
+(s=7) update over a stacked slope buffer:
+
+  unfused    — chained per-stage AXPY over a LIST of slope arrays
+               (the pre-refactor tree_scale_add layout): s+2 HBM passes
+  fused_jnp  — StageCombiner jnp oracle: stage-order accumulation over the
+               stacked (s, n) buffer, fused by XLA into a single pass
+  fused_pallas — the Pallas butcher_combine kernel (interpret mode on CPU,
+               so only a small size is timed here; on TPU this is the
+               compiled one-VMEM-pass path)
+
+Reports wall time and the compiled live-buffer requirement (structural
+memory, as in the other benches).  Also times a full fixed-grid dopri5
+solve under combine_backend jnp to guard bench_rk_sweep-style workloads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combine import alloc_stages, get_combiner, set_stage
+from repro.core.rk import rk_solve_fixed, tree_scale_add
+from repro.core.tableau import get_tableau
+from repro.kernels.butcher_combine import butcher_combine_pallas
+from .common import live_bytes, row, time_call
+
+PALLAS_N = 1 << 14   # interpret mode is a python-driven interpreter: keep small
+
+
+def _mk(n, s, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    x = jax.random.normal(ks[0], (n,), dtype=jnp.float32)
+    K = jax.random.normal(ks[1], (s, n), dtype=jnp.float32)
+    return x, K
+
+
+def run(sizes=(1 << 16, 1 << 20), method: str = "dopri5"):
+    tab = get_tableau(method)
+    s = tab.s
+    comb = get_combiner(tab, "jnp")
+    h = jnp.float32(0.1)
+    out = {}
+
+    for n in sizes:
+        x, K = _mk(n, s)
+        klist = [K[i] for i in range(s)]
+
+        @jax.jit
+        def unfused(x, *klist):
+            return tree_scale_add(
+                x, [(tab.b[i], h * klist[i]) for i in range(s)])
+
+        @jax.jit
+        def fused_jnp(x, K):
+            return comb.solution(x, K, h)
+
+        t_un = time_call(lambda: unfused(x, *klist), iters=10, warmup=2)
+        t_fu = time_call(lambda: fused_jnp(x, K), iters=10, warmup=2)
+        m_un = live_bytes(unfused, x, *klist)
+        m_fu = live_bytes(fused_jnp, x, K)
+        out[n] = dict(t_unfused=t_un, t_fused=t_fu)
+        row(f"combine_{method}_n{n}_unfused", t_un * 1e6,
+            f"mem_mb={m_un/2**20:.2f}")
+        row(f"combine_{method}_n{n}_fused_jnp", t_fu * 1e6,
+            f"mem_mb={m_fu/2**20:.2f},speedup={t_un/t_fu:.2f}x")
+
+    # Pallas path (interpret off-TPU: correctness/plumbing timing only).
+    x, K = _mk(PALLAS_N, s)
+    coefs = jnp.asarray(tab.b_dense, jnp.float32)
+    t_pl = time_call(
+        lambda: butcher_combine_pallas(x, K, coefs, h,
+                                       interpret=jax.default_backend()
+                                       != "tpu"),
+        iters=3, warmup=1)
+    row(f"combine_{method}_n{PALLAS_N}_fused_pallas", t_pl * 1e6,
+        f"interpret={jax.default_backend() != 'tpu'}")
+
+    # End-to-end guard: a fixed-grid solve through the combiner (the
+    # bench_rk_sweep-shaped workload must not regress).
+    def field(x, t, p):
+        return jnp.tanh(p["w"] @ x)
+
+    p = {"w": jax.random.normal(jax.random.PRNGKey(3), (64, 64),
+                                dtype=jnp.float32) * 0.2}
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (64,), dtype=jnp.float32)
+
+    @jax.jit
+    def solve(x0, p):
+        return rk_solve_fixed(field, tab, x0, 0.0, 1.0, 8, p).x_final
+
+    t_solve = time_call(lambda: solve(x0, p), iters=5, warmup=2)
+    row(f"combine_{method}_fixed_solve_n8", t_solve * 1e6, "")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_cnf        -> Table 2 (CNF: NLL / memory / time per grad method)
   bench_rk_sweep   -> Table 3 (RK methods s=2,3,6,12)
   bench_physics    -> Table 4 (KdV / Cahn-Hilliard, dopri8)
+  bench_combine    -> fused vs unfused stage combination (StageCombiner)
   roofline         -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
 """
 from __future__ import annotations
@@ -31,8 +32,8 @@ def _tolerance_subprocess():
 
 
 def main() -> None:
-    from . import (bench_cnf, bench_orders, bench_physics, bench_rk_sweep,
-                   bench_steps, roofline)
+    from . import (bench_cnf, bench_combine, bench_orders, bench_physics,
+                   bench_rk_sweep, bench_steps, roofline)
 
     benches = [
         ("bench_tolerance", _tolerance_subprocess),
@@ -41,6 +42,7 @@ def main() -> None:
         ("bench_cnf", bench_cnf.main),
         ("bench_rk_sweep", bench_rk_sweep.main),
         ("bench_physics", bench_physics.main),
+        ("bench_combine", bench_combine.main),
         ("roofline", roofline.main),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None

@@ -35,11 +35,15 @@ class NodeConfig:
                  stack, so grad_mode="symplectic" gives exact gradients with
                  O(R + s + one-unit) live memory.
     grad_mode: symplectic | backprop | remat_step | remat_solve | adjoint.
+    combine_backend: auto | jnp | pallas — how RK stage combinations over the
+      stacked slope buffers execute (auto = Pallas kernel on TPU, jnp oracle
+      elsewhere; see core/combine.py).
     """
     mode: str = "off"
     method: str = "euler"
     n_steps: int = 0               # 0 => one step per repeat unit
     grad_mode: str = "symplectic"
+    combine_backend: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,8 +2,10 @@
 
 Public API:
     odeint, odeint_with_stats, AdaptiveConfig, get_tableau, ButcherTableau,
-    GRAD_MODES
+    GRAD_MODES, COMBINE_BACKENDS, StageCombiner, get_combiner
 """
+from .combine import (COMBINE_BACKENDS, StageCombiner, alloc_stages,
+                      get_combiner, set_stage, stage_prefix, stage_suffix)
 from .odeint import GRAD_MODES, odeint, odeint_with_stats
 from .rk import (AdaptiveConfig, rk_solve_adaptive, rk_solve_fixed, rk_stages,
                  rk_step, tree_scale_add)
@@ -15,6 +17,8 @@ from .tableau import TABLEAUS, ButcherTableau, get_tableau
 
 __all__ = [
     "odeint", "odeint_with_stats", "GRAD_MODES", "AdaptiveConfig",
+    "COMBINE_BACKENDS", "StageCombiner", "get_combiner", "alloc_stages",
+    "set_stage", "stage_prefix", "stage_suffix",
     "rk_solve_fixed", "rk_solve_adaptive", "rk_step", "rk_stages",
     "tree_scale_add", "odeint_symplectic", "odeint_symplectic_adaptive",
     "symplectic_step_adjoint", "odeint_adjoint", "odeint_adjoint_adaptive",

@@ -39,27 +39,30 @@ def _aug_dynamics(f: VectorField):
     return aug
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def odeint_adjoint(f: VectorField, tab: ButcherTableau, n_steps: int,
-                   backward_steps_multiplier: int, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+                   backward_steps_multiplier: int, combine_backend: str,
+                   x0, t0, t1, params):
+    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                         combine_backend)
     return sol.x_final
 
 
-def _adj_fwd(f, tab, n_steps, bmult, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+def _adj_fwd(f, tab, n_steps, bmult, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                         combine_backend)
     # O(M): only the final state is retained (plus params).
     return sol.x_final, (sol.x_final, t0, t1, params)
 
 
-def _adj_bwd(f, tab, n_steps, bmult, res, lam_N):
+def _adj_bwd(f, tab, n_steps, bmult, combine_backend, res, lam_N):
     xN, t0, t1, params = res
     aug = _aug_dynamics(f)
     gtheta0 = jax.tree_util.tree_map(jnp.zeros_like, params)
     state_N = (xN, lam_N, gtheta0)
     # integrate backward: t goes t1 -> t0 (negative step).
     sol = rk_solve_fixed(aug, tab, state_N, t1, t0,
-                         n_steps * bmult, params)
+                         n_steps * bmult, params, combine_backend)
     x0_rec, lam0, gtheta = sol.x_final
     zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
     return (lam0, zt, zt, gtheta)
@@ -73,25 +76,27 @@ odeint_adjoint.defvjp(_adj_fwd, _adj_bwd)
 # augmented system with its own (typically tighter) tolerances.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def odeint_adjoint_adaptive(f: VectorField, tab: ButcherTableau,
                             cfg: AdaptiveConfig, bwd_cfg: AdaptiveConfig,
-                            x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg)
+                            combine_backend: str, x0, t0, t1, params):
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+                            combine_backend)
     return sol.x_final
 
 
-def _adja_fwd(f, tab, cfg, bwd_cfg, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg)
+def _adja_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+                            combine_backend)
     return sol.x_final, (sol.x_final, t0, t1, params)
 
 
-def _adja_bwd(f, tab, cfg, bwd_cfg, res, lam_N):
+def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
     xN, t0, t1, params = res
     aug = _aug_dynamics(f)
     gtheta0 = jax.tree_util.tree_map(jnp.zeros_like, params)
     sol = rk_solve_adaptive(aug, tab, (xN, lam_N, gtheta0), t1, t0,
-                            params, bwd_cfg)
+                            params, bwd_cfg, combine_backend)
     _, lam0, gtheta = sol.x_final
     zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
     return (lam0, zt, zt, gtheta)

@@ -11,6 +11,9 @@
                        nothing saved: re-runs the forward once inside the
                        backward and then backprops it: memory O(M + N s L) —
                        the paper's "baseline scheme".
+
+All three route stage combination through the StageCombiner; the Pallas
+backend stays differentiable via the custom-JVP wrappers in core/combine.py.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ from typing import Any
 
 import jax
 
+from .combine import get_combiner
 from .rk import VectorField, rk_solve_fixed, rk_step
 from .tableau import ButcherTableau
 
@@ -26,20 +30,23 @@ Pytree = Any
 
 
 def odeint_backprop(f: VectorField, tab: ButcherTableau, n_steps: int,
-                    x0, t0, t1, params):
-    return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params).x_final
+                    x0, t0, t1, params, combine_backend: str = "auto"):
+    return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                          combine_backend).x_final
 
 
 def odeint_remat_step(f: VectorField, tab: ButcherTableau, n_steps: int,
-                      x0, t0, t1, params):
+                      x0, t0, t1, params, combine_backend: str = "auto"):
     import jax.numpy as jnp
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     t1 = jnp.asarray(t1, dtype=t0.dtype)
     h = (t1 - t0) / n_steps
+    combiner = get_combiner(tab, combine_backend)
 
     @jax.checkpoint
     def step(x, t, params):
-        x_next, _ = rk_step(f, tab, x, t, h, params)
+        x_next, _ = rk_step(f, tab, x, t, h, params, combiner,
+                            with_error=False)
         return x_next
 
     def body(x, n):
@@ -51,10 +58,11 @@ def odeint_remat_step(f: VectorField, tab: ButcherTableau, n_steps: int,
 
 
 def odeint_remat_solve(f: VectorField, tab: ButcherTableau, n_steps: int,
-                       x0, t0, t1, params):
+                       x0, t0, t1, params, combine_backend: str = "auto"):
     @functools.partial(jax.checkpoint,
                        policy=jax.checkpoint_policies.nothing_saveable)
     def solve(x0, params):
-        return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params).x_final
+        return rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                              combine_backend).x_final
 
     return solve(x0, params)

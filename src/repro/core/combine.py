@@ -1,0 +1,378 @@
+"""Stacked stage buffers + the StageCombiner: ALL RK stage linear algebra.
+
+The stage representation across the solver stack is a *stacked slope buffer*:
+for a state pytree ``x`` the slopes k_1..k_s live as one buffer per leaf with
+a leading stage dimension — leaf shape ``(s,) + x_leaf.shape``.  Every linear
+combination the solvers need is a *row combine* against that buffer,
+
+    out = base + h * sum_i coefs[i] * K[i],
+
+which is memory-bound (arithmetic intensity < 1 FLOP/byte), so the entire
+question is how many HBM passes it costs.  The chained per-stage AXPY of the
+old list-of-pytrees layout costs s+2 passes; a row combine over the stacked
+buffer costs exactly one read of (base, K) and one write of out — see
+docs/stage_combine.md for the arithmetic.
+
+The StageCombiner routes four solver operations through that primitive:
+
+  * forward stage states   X_i = x + h * sum_{j<i} a_ij k_j          (Eq. 5)
+  * the step update        x_{n+1} = x + h * sum_i b_i k_i           (Eq. 5)
+  * the embedded error     err = h * sum_i b_err_i k_i   (+ FSAL slope)
+  * the backward recursion Lambda_i / lambda_n of Algorithm 2        (Eq. 7/8)
+
+and dispatches each leaf either to the pure-jnp oracle (a stage-order
+accumulation over the stacked buffer, unrolled so XLA fuses it into one
+elementwise pass) or to the Pallas kernel
+``kernels/butcher_combine.py`` (one VMEM-tiled pass on TPU), selected by the
+``combine_backend`` knob on ``odeint``:
+
+  auto    — Pallas on TPU backends, jnp elsewhere                    [default]
+  jnp     — always the jnp oracle (dtype-preserving; exact in f64)
+  pallas  — always the Pallas kernel (interpret mode off-TPU; f32 accumulate)
+
+For the backward recursion the h-dependence of the paper's Eq. (7)/(8)
+coefficients (btilde_j = b_j, or h_n for the I0 = {i : b_i = 0} stages) is
+factored into three h-independent numpy matrices R/P/Q precomputed per
+tableau, so the per-stage coefficient row is just R[i] + h P[i] + h^2 Q[i].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from .tableau import ButcherTableau
+
+Pytree = Any
+
+COMBINE_BACKENDS = ("auto", "jnp", "pallas")
+
+__all__ = ["COMBINE_BACKENDS", "StageCombiner", "get_combiner",
+           "alloc_stages", "set_stage", "stage_prefix", "stage_suffix",
+           "resolve_backend"]
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in COMBINE_BACKENDS:
+        raise ValueError(
+            f"combine_backend {backend!r} not in {COMBINE_BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Stacked slope buffers
+# ---------------------------------------------------------------------------
+
+def alloc_stages(s: int, x: Pytree) -> Pytree:
+    """Zero slope buffer: each leaf gets shape (s,) + leaf.shape."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros((s,) + l.shape, l.dtype), x)
+
+
+def set_stage(K: Pytree, i: int, k: Pytree) -> Pytree:
+    """Write slope k into row i of the stacked buffer (static index)."""
+    return jax.tree_util.tree_map(
+        lambda buf, l: buf.at[i].set(l.astype(buf.dtype)), K, k)
+
+
+def stage_prefix(K: Pytree, i: int) -> Pytree:
+    """Rows [0, i) of the stacked buffer (static slice)."""
+    return jax.tree_util.tree_map(
+        lambda buf: jax.lax.slice_in_dim(buf, 0, i, axis=0), K)
+
+
+def stage_suffix(K: Pytree, i: int) -> Pytree:
+    """Rows [i, s) of the stacked buffer (static slice)."""
+    return jax.tree_util.tree_map(
+        lambda buf: jax.lax.slice_in_dim(buf, i, buf.shape[0], axis=0), K)
+
+
+def append_stage(K: Pytree, k: Pytree) -> Pytree:
+    """Concatenate one extra slope row (the FSAL error stage)."""
+    return jax.tree_util.tree_map(
+        lambda buf, l: jnp.concatenate(
+            [buf, l.astype(buf.dtype)[None]], axis=0), K, k)
+
+
+# ---------------------------------------------------------------------------
+# Pallas leaf combines, made differentiable so the backprop / remat gradient
+# modes can differentiate THROUGH the kernel calls: pallas_call has no AD
+# rules, so each wrapper gets a custom JVP whose tangent is expressed in
+# plain (transposable) jnp ops.  symbolic_zeros matters for memory: the
+# coefficient rows are tableau constants in every solver use, so their
+# tangents are symbolic zeros and the dhc·K term — the only term that would
+# retain the stage buffer K as a reverse-mode residual — never enters the
+# linearized graph.
+# ---------------------------------------------------------------------------
+
+def _is_zero(t) -> bool:
+    return isinstance(t, jax.custom_derivatives.SymbolicZero)
+
+
+@jax.custom_jvp
+def _fused_axpy(base, K, hc):
+    """base + sum_i hc[i] * K[i] via the Pallas kernel (one HBM pass)."""
+    return ops.butcher_combine(base, K, hc, jnp.float32(1.0), use_pallas=True)
+
+
+def _fused_axpy_jvp(primals, tangents):
+    base, K, hc = primals
+    dbase, dK, dhc = tangents
+    out = ops.butcher_combine(base, K, hc, jnp.float32(1.0), use_pallas=True)
+    acc_dt = jnp.promote_types(out.dtype, jnp.float32)
+    dout = jnp.zeros(out.shape, acc_dt)
+    if not _is_zero(dbase):
+        dout = dout + dbase.astype(acc_dt)
+    if not _is_zero(dK):
+        for i in range(K.shape[0]):
+            dout = dout + hc[i].astype(acc_dt) * dK[i].astype(acc_dt)
+    if not _is_zero(dhc):
+        for i in range(K.shape[0]):
+            dout = dout + dhc[i].astype(acc_dt) * K[i].astype(acc_dt)
+    return out, dout.astype(out.dtype)
+
+
+_fused_axpy.defjvp(_fused_axpy_jvp, symbolic_zeros=True)
+
+
+@jax.custom_jvp
+def _fused_axpy_rows(x, K, hc, sc):
+    """out[r] = sc[r]*x + sum_i hc[r, i]*K[i] via the multi-row kernel."""
+    return ops.butcher_combine_rows(x, K, hc, sc, jnp.float32(1.0),
+                                    use_pallas=True)
+
+
+def _fused_axpy_rows_jvp(primals, tangents):
+    x, K, hc, sc = primals
+    dx, dK, dhc, dsc = tangents
+    out = ops.butcher_combine_rows(x, K, hc, sc, jnp.float32(1.0),
+                                   use_pallas=True)
+    acc_dt = jnp.promote_types(out.dtype, jnp.float32)
+    douts = []
+    for r in range(hc.shape[0]):
+        acc = jnp.zeros(x.shape, acc_dt)
+        if not _is_zero(dx):
+            acc = acc + sc[r].astype(acc_dt) * dx.astype(acc_dt)
+        if not _is_zero(dK):
+            for i in range(K.shape[0]):
+                acc = acc + hc[r, i].astype(acc_dt) * dK[i].astype(acc_dt)
+        if not _is_zero(dhc):
+            for i in range(K.shape[0]):
+                acc = acc + dhc[r, i].astype(acc_dt) * K[i].astype(acc_dt)
+        if not _is_zero(dsc):
+            acc = acc + dsc[r].astype(acc_dt) * x.astype(acc_dt)
+        douts.append(acc)
+    return out, jnp.stack(douts).astype(out.dtype)
+
+
+_fused_axpy_rows.defjvp(_fused_axpy_rows_jvp, symbolic_zeros=True)
+
+
+# ---------------------------------------------------------------------------
+# StageCombiner
+# ---------------------------------------------------------------------------
+
+class StageCombiner:
+    """All stage linear algebra for one tableau, backend-dispatched.
+
+    Instances are cheap, stateless and cached (``get_combiner``); every
+    method is traceable (h and traced coefficient rows are fine).
+    """
+
+    def __init__(self, tab: ButcherTableau, backend: str = "auto"):
+        self.tab = tab
+        self.backend = resolve_backend(backend)
+        s = tab.s
+        self.a_np = tab.a_dense
+        self.b_np = tab.b_dense
+        self.c_np = tab.c_dense
+        self.b_err_np = tab.b_err_dense
+        # I0 = {i : b_i = 0}: stages whose btilde is h_n (paper Eq. 8).
+        self.i0_np = (self.b_np == 0.0).astype(np.float64)
+        # Backward Lambda-recursion coefficient rows, Eq. (7)/(8) with the
+        # h-dependence factored out:  coef_i(h) = R[i] + h P[i] + h^2 Q[i],
+        # nonzero only for j > i.  Derivation: btilde_j = b_j + h [b_j = 0].
+        R = np.zeros((s, s))
+        P = np.zeros((s, s))
+        Q = np.zeros((s, s))
+        for i in range(s):
+            for j in range(i + 1, s):
+                aji = self.a_np[j, i]
+                if aji == 0.0:
+                    continue
+                if self.b_np[i] != 0.0:
+                    # -(h btilde_j) a_ji / b_i
+                    P[i, j] += -aji * self.b_np[j] / self.b_np[i]
+                    Q[i, j] += -aji * self.i0_np[j] / self.b_np[i]
+                else:
+                    # -btilde_j a_ji
+                    R[i, j] += -aji * self.b_np[j]
+                    P[i, j] += -aji * self.i0_np[j]
+        self._lam_R, self._lam_P, self._lam_Q = R, P, Q
+
+    # -- the one primitive everything routes through ----------------------
+
+    def combine(self, base: Pytree, K: Pytree, coefs, h=1.0,
+                idx=None) -> Pytree:
+        """base + h * sum_p coefs[p] * K[idx[p]], per leaf, one fused pass.
+
+        ``K`` is a stacked slope buffer pytree; ``coefs`` may be a static
+        numpy row or a traced jnp row (the backward recursion's h-dependent
+        rows).  ``idx`` (jnp backend only) maps coefficient positions to
+        static buffer rows, so callers with a traced-but-statically-sparse
+        row can prune dead slope-row reads at trace time; when omitted,
+        coefs aligns with K's leading dim.
+        """
+        n_rows = int(np.shape(coefs)[0])
+        if n_rows == 0:
+            return base
+        leaves_b, treedef = jax.tree_util.tree_flatten(base)
+        leaves_K = treedef.flatten_up_to(K)
+        if self.backend == "pallas":
+            assert idx is None, "row pruning is a jnp-backend optimization"
+            hc = (jnp.asarray(h, jnp.float32)
+                  * jnp.asarray(coefs, jnp.float32))
+            out = [_fused_axpy(lb, lk, hc)
+                   for lb, lk in zip(leaves_b, leaves_K)]
+        else:
+            out = [self._combine_leaf_jnp(lb, lk, coefs, h, idx)
+                   for lb, lk in zip(leaves_b, leaves_K)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    @staticmethod
+    def _combine_leaf_jnp(base, K, coefs, h, idx=None):
+        # accumulate in >= f32 (matches the kernel's f32 accumulate for
+        # low-precision leaves) and in f64 when the state is f64, so the
+        # symplectic gradient stays exact to rounding in x64 tests.
+        # Unrolled over the stage dim in the kernel's order: XLA fuses the
+        # chain into ONE elementwise pass over (base, K) — a tensordot
+        # would lower to a degenerate (1, s) x (s, n) gemm instead.
+        acc_dt = jnp.promote_types(base.dtype, jnp.float32)
+        hc = jnp.asarray(h, acc_dt) * jnp.asarray(coefs).astype(acc_dt)
+        # statically-zero coefficients (explicit-tableau rows are sparse,
+        # e.g. dopri5's b_2 = 0) cost a slope-row read each: skip them at
+        # trace time, as the pre-refactor chained AXPY did.  ``idx`` is the
+        # caller-provided static sparsity pattern for traced rows.
+        if idx is not None:
+            pairs = [(p, int(col)) for p, col in enumerate(idx)]
+        elif isinstance(coefs, np.ndarray):
+            pairs = [(p, p) for p in np.nonzero(coefs)[0]]
+        else:
+            pairs = [(p, p) for p in range(K.shape[0])]
+        acc = base.astype(acc_dt)
+        for p, col in pairs:
+            acc = acc + hc[p] * K[col].astype(acc_dt)
+        return acc.astype(base.dtype)
+
+    def combine_rows(self, x: Pytree, K: Pytree, rows, base_scale, h):
+        """Multi-row combine: out[r] = base_scale[r]*x + h sum_i rows[r,i] K[i].
+
+        One read of (x, K) produces all m outputs — used to fuse the step
+        update and the embedded error estimate into a single pass.  Returns
+        a list of m pytrees.
+        """
+        m = int(np.shape(rows)[0])
+        leaves_x, treedef = jax.tree_util.tree_flatten(x)
+        leaves_K = treedef.flatten_up_to(K)
+        outs = [[] for _ in range(m)]
+        for lx, lk in zip(leaves_x, leaves_K):
+            if self.backend == "pallas":
+                hc = (jnp.asarray(h, jnp.float32)
+                      * jnp.asarray(rows, jnp.float32))
+                sc = jnp.asarray(base_scale, jnp.float32)
+                o = _fused_axpy_rows(lx, lk, hc, sc)
+                for r in range(m):
+                    outs[r].append(o[r])
+            else:
+                acc_dt = jnp.promote_types(lx.dtype, jnp.float32)
+                hc = jnp.asarray(h, acc_dt) * jnp.asarray(rows).astype(acc_dt)
+                sc = jnp.asarray(base_scale).astype(acc_dt)
+                rows_np = rows if isinstance(rows, np.ndarray) else None
+                for r in range(m):
+                    acc = sc[r] * lx.astype(acc_dt)
+                    idx = (np.nonzero(rows_np[r])[0] if rows_np is not None
+                           else range(lk.shape[0]))
+                    for i in idx:
+                        acc = acc + hc[r, i] * lk[i].astype(acc_dt)
+                    outs[r].append(acc.astype(lx.dtype))
+        return [jax.tree_util.tree_unflatten(treedef, o) for o in outs]
+
+    # -- forward (Eq. 5) ---------------------------------------------------
+
+    def stage_state(self, x: Pytree, K: Pytree, h, i: int) -> Pytree:
+        """X_i = x + h sum_{j<i} a_ij k_j over the buffer prefix K[:i]."""
+        if i == 0 or not self.a_np[i, :i].any():
+            return x
+        return self.combine(x, stage_prefix(K, i), self.a_np[i, :i], h)
+
+    def solution(self, x: Pytree, K: Pytree, h) -> Pytree:
+        """x_{n+1} = x + h sum_i b_i k_i."""
+        return self.combine(x, K, self.b_np, h)
+
+    def error(self, x: Pytree, K_err: Pytree, h) -> Pytree:
+        """err = h sum_i b_err_i k_i (K_err includes the FSAL slope when
+        the tableau's error weights reference f(x_{n+1})).
+
+        The pallas path reads the zeros base as a kernel operand — one
+        avoidable state-sized read (~1/(s+2) of the pass) on the
+        err_uses_fsal adaptive path; a base-less kernel variant could
+        drop it if that path ever becomes hot.
+        """
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, x)
+        return self.combine(zeros, K_err, self.b_err_np, h)
+
+    def solution_and_error(self, x: Pytree, K: Pytree, h):
+        """(x_{n+1}, err) from ONE read of (x, K).
+
+        Only valid when the error weights do not reference the FSAL stage
+        (err_uses_fsal=False): both rows then combine the same s slopes.
+        """
+        assert not self.tab.err_uses_fsal and self.b_err_np is not None
+        rows = np.stack([self.b_np, self.b_err_np])
+        x_next, err = self.combine_rows(x, K, rows, np.array([1.0, 0.0]), h)
+        return x_next, err
+
+    # -- backward (Algorithm 2, Eq. 7/8) -----------------------------------
+
+    def lambda_stage(self, lam_next: Pytree, L: Pytree, h, i: int) -> Pytree:
+        """Lambda_{n,i} from the adjoint-slope buffer suffix L[i+1:]."""
+        if self.b_np[i] != 0.0:
+            base = lam_next
+        else:
+            base = jax.tree_util.tree_map(jnp.zeros_like, lam_next)
+        s = self.tab.s
+        R = self._lam_R[i, i + 1:]
+        P = self._lam_P[i, i + 1:]
+        Q = self._lam_Q[i, i + 1:]
+        if i == s - 1 or not (R.any() or P.any() or Q.any()):
+            return base
+        h = jnp.asarray(h)
+        if self.backend == "pallas":
+            # the kernel reads the whole suffix in its single pass anyway
+            row = (jnp.asarray(R) + h * jnp.asarray(P)
+                   + (h * h) * jnp.asarray(Q))
+            return self.combine(base, stage_suffix(L, i + 1), row, 1.0)
+        # the row is traced (h-dependent) but its sparsity is static: prune
+        # the structurally-dead adjoint-slope rows from the fused read.
+        nz = np.nonzero((R != 0.0) | (P != 0.0) | (Q != 0.0))[0]
+        row = (jnp.asarray(R[nz]) + h * jnp.asarray(P[nz])
+               + (h * h) * jnp.asarray(Q[nz]))
+        return self.combine(base, L, row, 1.0, idx=nz + i + 1)
+
+    def lambda_update(self, lam_next: Pytree, L: Pytree, h) -> Pytree:
+        """lambda_n = lambda_{n+1} - h sum_i btilde_i l_{n,i}."""
+        h = jnp.asarray(h)
+        coefs = -(jnp.asarray(self.b_np) + h * jnp.asarray(self.i0_np))
+        return self.combine(lam_next, L, coefs, h)
+
+
+@functools.lru_cache(maxsize=None)
+def get_combiner(tab: ButcherTableau,
+                 backend: str = "auto") -> StageCombiner:
+    return StageCombiner(tab, backend)

@@ -11,6 +11,18 @@
   remat_solve  — baseline scheme: exact gradient, memory O(N s L) in bwd
   adjoint      — continuous adjoint: approximate gradient, memory O(L)
 
+``combine_backend`` selects how every RK stage linear combination (forward
+stage states, step update, embedded error, and the symplectic backward
+Lambda/lambda recursions) is executed over the stacked slope buffers:
+
+  auto    — Pallas ``butcher_combine`` kernel on TPU, jnp oracle elsewhere
+  jnp     — one fused single-pass contraction per combine (dtype-preserving;
+            exact-to-rounding in float64)
+  pallas  — always the Pallas kernel (interpret mode off-TPU; f32 accumulate)
+
+See docs/stage_combine.md for the stacked-buffer layout and the HBM-pass
+arithmetic motivating the fused path.
+
 The vector field signature is f(x, t, params) -> dx/dt over arbitrary pytrees.
 Times t0/t1 are not differentiated (zero cotangents), matching the paper's
 setting where T is fixed.
@@ -23,6 +35,7 @@ import jax.numpy as jnp
 
 from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
 from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
+from .combine import resolve_backend
 from .rk import (AdaptiveConfig, VectorField, rk_solve_adaptive,
                  rk_solve_fixed)
 from .symplectic import odeint_symplectic, odeint_symplectic_adaptive
@@ -38,52 +51,69 @@ def odeint(f: VectorField, x0, params, *, t0=0.0, t1=1.0,
            n_steps: int = 16,
            adaptive: Optional[AdaptiveConfig] = None,
            adjoint_adaptive_cfg: Optional[AdaptiveConfig] = None,
-           adjoint_steps_multiplier: int = 1):
+           adjoint_steps_multiplier: int = 1,
+           combine_backend: str = "auto"):
     tab = get_tableau(method) if isinstance(method, str) else method
     if grad_mode not in GRAD_MODES:
         raise ValueError(f"grad_mode {grad_mode!r} not in {GRAD_MODES}")
+    resolve_backend(combine_backend)  # eager validation, single source
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     t1 = jnp.asarray(t1, dtype=t0.dtype)
 
     if adaptive is not None:
         if grad_mode == "symplectic":
             return odeint_symplectic_adaptive(f, tab, adaptive,
+                                              combine_backend,
                                               x0, t0, t1, params)
         if grad_mode == "adjoint":
             bwd = adjoint_adaptive_cfg or adaptive
             return odeint_adjoint_adaptive(f, tab, adaptive, bwd,
+                                           combine_backend,
                                            x0, t0, t1, params)
         if grad_mode == "backprop":
             # differentiable-through adaptive solve (expensive; for tests)
             return rk_solve_adaptive(f, tab, x0, t0, t1, params,
-                                     adaptive).x_final
+                                     adaptive, combine_backend).x_final
         raise ValueError(
             f"grad_mode {grad_mode!r} unsupported with adaptive stepping")
 
     if grad_mode == "symplectic":
-        return odeint_symplectic(f, tab, n_steps, x0, t0, t1, params)
+        return odeint_symplectic(f, tab, n_steps, combine_backend,
+                                 x0, t0, t1, params)
     if grad_mode == "backprop":
-        return odeint_backprop(f, tab, n_steps, x0, t0, t1, params)
+        return odeint_backprop(f, tab, n_steps, x0, t0, t1, params,
+                               combine_backend)
     if grad_mode == "remat_step":
-        return odeint_remat_step(f, tab, n_steps, x0, t0, t1, params)
+        return odeint_remat_step(f, tab, n_steps, x0, t0, t1, params,
+                                 combine_backend)
     if grad_mode == "remat_solve":
-        return odeint_remat_solve(f, tab, n_steps, x0, t0, t1, params)
+        return odeint_remat_solve(f, tab, n_steps, x0, t0, t1, params,
+                                  combine_backend)
     if grad_mode == "adjoint":
         return odeint_adjoint(f, tab, n_steps, adjoint_steps_multiplier,
-                              x0, t0, t1, params)
+                              combine_backend, x0, t0, t1, params)
     raise AssertionError
 
 
 def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=1.0,
                       method: Union[str, ButcherTableau] = "dopri5",
                       n_steps: int = 16,
-                      adaptive: Optional[AdaptiveConfig] = None):
+                      adaptive: Optional[AdaptiveConfig] = None,
+                      combine_backend: str = "auto"):
     """Non-differentiable solve returning integration statistics."""
     tab = get_tableau(method) if isinstance(method, str) else method
+    resolve_backend(combine_backend)  # eager validation, single source
     if adaptive is None:
-        sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+        sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                             combine_backend)
+        # the fixed-grid driver skips the embedded error estimate, so the
+        # cost is exactly s evaluations per step — including for tableaus
+        # whose error weights would need an extra f(x_{n+1}) evaluation
+        # (err_uses_fsal), which the old always-estimate path silently paid
+        # without it ever being counted here.
         return sol.x_final, {"n_steps": n_steps,
                              "n_fevals": n_steps * tab.s}
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, adaptive)
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, adaptive,
+                            combine_backend)
     return sol.x_final, {"n_steps": sol.n_accepted,
                          "n_fevals": sol.n_fevals}

@@ -11,15 +11,27 @@ Two drivers:
 Both record the step checkpoints {x_n, t_n, h_n} that Algorithm 1 of the paper
 retains; computation graphs are never part of the residuals (the gradient
 modes in odeint.py decide what autodiff sees).
+
+Stage representation: slopes are held in a *stacked* buffer — one leading
+stage dimension per leaf — and every stage linear combination (stage states,
+the step update, the embedded error) goes through the StageCombiner
+(core/combine.py), which fuses each combination into a single HBM pass and
+dispatches between the jnp oracle and the Pallas ``butcher_combine`` kernel
+via the ``combine_backend`` knob.  The fixed-grid driver never computes the
+embedded error estimate (there is no step controller to consume it), saving
+one error combine — and, for tableaus whose error weights reference
+f(x_{n+1}), one whole network evaluation — per step.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .combine import (StageCombiner, alloc_stages, append_stage,
+                      get_combiner, set_stage)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -28,11 +40,12 @@ VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
 
 
 def tree_scale_add(base: Pytree, terms) -> Pytree:
-    """base + sum_i coef_i * tree_i, fused per leaf.
+    """base + sum_i coef_i * tree_i via chained per-leaf AXPYs.
 
-    ``terms`` is a list of (coef, tree). Zero coefficients (python floats)
-    are dropped at trace time, so explicit tableaus pay only for their
-    nonzero entries.
+    ``terms`` is a list of (coef, tree).  Zero coefficients (python floats)
+    are dropped at trace time.  This is the UNFUSED combination path — s+2
+    HBM passes; the solver hot loop uses the StageCombiner instead.  Kept as
+    the reference for tests and benchmarks/bench_combine.py.
     """
     terms = [(c, t) for (c, t) in terms
              if not (isinstance(c, float) and c == 0.0)]
@@ -50,43 +63,50 @@ def tree_scale_add(base: Pytree, terms) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def rk_stages(f: VectorField, tab: ButcherTableau, x, t, h, params):
+def rk_stages(f: VectorField, tab: ButcherTableau, x, t, h, params,
+              combiner: Optional[StageCombiner] = None):
     """Compute all stage states X_i and slopes k_i for one step.
 
-    Returns (Xs, ks) as lists of pytrees, length s. Purely forward; the
-    symplectic backward pass re-runs this from a checkpoint (Alg. 2 lines 3-7).
+    Returns (Xs, K): ``Xs`` is a list of s stage-state pytrees, ``K`` the
+    stacked slope buffer (leading stage dim s per leaf).  Purely forward;
+    the symplectic backward pass re-runs this from a checkpoint (Alg. 2
+    lines 3-7).
     """
+    combiner = combiner or get_combiner(tab)
     s = tab.s
-    Xs, ks = [], []
+    K = alloc_stages(s, x)
+    Xs = []
     for i in range(s):
-        Xi = tree_scale_add(
-            x, [(tab.a[i][j], _hk(h, ks[j])) for j in range(i)])
+        Xi = combiner.stage_state(x, K, h, i)
         ki = f(Xi, t + tab.c[i] * h, params)
+        K = set_stage(K, i, ki)
         Xs.append(Xi)
-        ks.append(ki)
-    return Xs, ks
+    return Xs, K
 
 
-def _hk(h, k):
-    # cast h into each leaf dtype so mixed-precision states keep their dtype
-    return jax.tree_util.tree_map(
-        lambda l: jnp.asarray(h, dtype=l.dtype) * l, k)
+def rk_step(f: VectorField, tab: ButcherTableau, x, t, h, params,
+            combiner: Optional[StageCombiner] = None,
+            with_error: Optional[bool] = None):
+    """One explicit RK step: returns (x_next, err_estimate_or_None).
 
-
-def rk_step(f: VectorField, tab: ButcherTableau, x, t, h, params):
-    """One explicit RK step: returns (x_next, err_estimate_or_None)."""
-    Xs, ks = rk_stages(f, tab, x, t, h, params)
-    x_next = tree_scale_add(
-        x, [(tab.b[i], _hk(h, ks[i])) for i in range(tab.s)])
-    err = None
-    if tab.b_err is not None:
-        ks_err = list(ks)
-        if tab.err_uses_fsal:
-            ks_err.append(f(x_next, t + h, params))
-        err = tree_scale_add(
-            jax.tree_util.tree_map(jnp.zeros_like, x),
-            [(tab.b_err[i], _hk(h, ks_err[i])) for i in range(len(ks_err))])
-    return x_next, err
+    ``with_error=False`` skips the embedded error estimate (the fixed-grid
+    drivers pass it; there is no controller to consume the estimate).  The
+    default (None) computes it whenever the tableau has error weights.
+    """
+    combiner = combiner or get_combiner(tab)
+    if with_error is None:
+        with_error = tab.b_err is not None
+    Xs, K = rk_stages(f, tab, x, t, h, params, combiner)
+    if not (with_error and tab.b_err is not None):
+        return combiner.solution(x, K, h), None
+    if tab.err_uses_fsal:
+        # the error weights reference k_{s+1} = f(x_{n+1}); the solution must
+        # come first, then one extra evaluation extends the slope buffer.
+        x_next = combiner.solution(x, K, h)
+        K_err = append_stage(K, f(x_next, t + h, params))
+        return x_next, combiner.error(x, K_err, h)
+    # both rows (b, b_err) combine the same s slopes: fuse into ONE pass.
+    return combiner.solution_and_error(x, K, h)
 
 
 class FixedSolution(NamedTuple):
@@ -97,15 +117,18 @@ class FixedSolution(NamedTuple):
 
 
 def rk_solve_fixed(f: VectorField, tab: ButcherTableau, x0, t0, t1,
-                   n_steps: int, params) -> FixedSolution:
+                   n_steps: int, params,
+                   combine_backend: str = "auto") -> FixedSolution:
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     t1 = jnp.asarray(t1, dtype=t0.dtype)
     h = (t1 - t0) / n_steps
+    combiner = get_combiner(tab, combine_backend)
 
     def body(carry, n):
         x, = carry
         t = t0 + n.astype(t0.dtype) * h
-        x_next, _ = rk_step(f, tab, x, t, h, params)
+        x_next, _ = rk_step(f, tab, x, t, h, params, combiner,
+                            with_error=False)
         return (x_next,), (x, t)
 
     (xf,), (xs, ts) = jax.lax.scan(body, (x0,), jnp.arange(n_steps))
@@ -151,7 +174,8 @@ def _error_norm(err, x, x_next, rtol, atol):
 
 
 def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
-                      params, cfg: AdaptiveConfig) -> AdaptiveSolution:
+                      params, cfg: AdaptiveConfig,
+                      combine_backend: str = "auto") -> AdaptiveSolution:
     if tab.b_err is None:
         raise ValueError(f"tableau {tab.name} has no embedded error estimate")
     dtype = jnp.result_type(float)
@@ -159,6 +183,7 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
     t1 = jnp.asarray(t1, dtype=dtype)
     direction = jnp.sign(t1 - t0)
     err_exp = -1.0 / (tab.err_order + 1.0)
+    combiner = get_combiner(tab, combine_backend)
 
     zeros_like_buf = jax.tree_util.tree_map(
         lambda l: jnp.zeros((cfg.max_steps,) + l.shape, l.dtype), x0)
@@ -174,7 +199,8 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
         (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
         # clamp the step so we land exactly on t1
         h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
-        x_next, err = rk_step(f, tab, x, t, h_eff, params)
+        x_next, err = rk_step(f, tab, x, t, h_eff, params, combiner,
+                              with_error=True)
         enorm = _error_norm(err, x, x_next, cfg.rtol, cfg.atol)
         accept = enorm <= 1.0
         factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
@@ -182,32 +208,23 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
                           cfg.min_factor, cfg.max_factor)
         h_new = h_eff * factor
 
-        xs = jax.tree_util.tree_map(
-            lambda buf, val: jax.lax.cond(
-                accept,
-                lambda: jax.lax.dynamic_update_index_in_dim(
-                    buf, val.astype(buf.dtype), n_acc, 0),
-                lambda: buf),
-            xs, x)
-        ts = jax.lax.cond(
-            accept,
-            lambda: jax.lax.dynamic_update_index_in_dim(ts_buf_like(ts), t,
-                                                        n_acc, 0),
-            lambda: ts)
-        hs = jax.lax.cond(
-            accept,
-            lambda: jax.lax.dynamic_update_index_in_dim(ts_buf_like(hs),
-                                                        h_eff, n_acc, 0),
-            lambda: hs)
+        def commit(bufs):
+            xs_b, ts_b, hs_b = bufs
+            xs_b = jax.tree_util.tree_map(
+                lambda buf, val: jax.lax.dynamic_update_index_in_dim(
+                    buf, val.astype(buf.dtype), n_acc, 0), xs_b, x)
+            ts_b = jax.lax.dynamic_update_index_in_dim(ts_b, t, n_acc, 0)
+            hs_b = jax.lax.dynamic_update_index_in_dim(hs_b, h_eff, n_acc, 0)
+            return xs_b, ts_b, hs_b
+
+        xs, ts, hs = jax.lax.cond(accept, commit, lambda bufs: bufs,
+                                  (xs, ts, hs))
         t = jnp.where(accept, t + h_eff, t)
         x = jax.tree_util.tree_map(
             lambda a, b: jnp.where(accept, b, a), x, x_next)
         n_acc = n_acc + accept.astype(jnp.int32)
         fevals = tab.s + (1 if tab.err_uses_fsal else 0)
         return (t, x, h_new, n_acc, n_try + 1, xs, ts, hs, fe + fevals)
-
-    def ts_buf_like(b):
-        return b
 
     h0 = direction * jnp.asarray(cfg.initial_step, dtype)
     state0 = (t0, x0, h0, jnp.int32(0), jnp.int32(0),

@@ -22,6 +22,12 @@ invariant lambda^T delta is conserved exactly in discrete time (Theorem 2), so
 lambda_0 equals the EXACT gradient of the discrete forward map — verified
 against jax.grad-through-the-solver to rounding error in tests.
 
+The adjoint slopes l_{n,i} live in a stacked buffer (leading stage dim per
+leaf), and both the Lambda recursion and the lambda_n update are row combines
+through the StageCombiner (core/combine.py) — the same fused one-HBM-pass
+primitive (jnp oracle or Pallas kernel) the forward solve uses, with the
+h-dependent Eq. (7)/(8) coefficient rows precomputed per tableau.
+
 Memory note (the paper's point, realized in XLA dataflow): the stage-i VJP's
 residuals are forced to be live one-at-a-time by threading the previous
 adjoint slope through ``lax.optimization_barrier`` into the stage state, so
@@ -31,13 +37,14 @@ Live memory is O(N + s + L), not O(N * s * L).
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .combine import StageCombiner, alloc_stages, get_combiner, set_stage
 from .rk import (AdaptiveConfig, VectorField, rk_solve_adaptive,
-                 rk_solve_fixed, rk_stages, tree_scale_add)
+                 rk_solve_fixed, rk_stages)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -60,49 +67,39 @@ def _barrier_with(x: Pytree, dep: Pytree) -> Pytree:
 
 
 def symplectic_step_adjoint(f: VectorField, tab: ButcherTableau,
-                            x_n, t_n, h, params, lam_next):
+                            x_n, t_n, h, params, lam_next,
+                            combiner: Optional[StageCombiner] = None):
     """One backward step of Algorithm 2. Returns (lambda_n, grad_theta_step)."""
+    combiner = combiner or get_combiner(tab)
     s = tab.s
-    a, b, c = tab.a, tab.b, tab.c
+    b, c = tab.b, tab.c
     # --- Alg.2 lines 3-7: recompute stages from the checkpoint ----------
-    Xs, _ks = rk_stages(f, tab, x_n, t_n, h, params)
+    Xs, _K = rk_stages(f, tab, x_n, t_n, h, params, combiner)
 
     def btilde(i):
         # Eq. (8): h_n replaces vanishing weights.
         return h if b[i] == 0.0 else b[i]
 
-    ls = [None] * s
+    L = alloc_stages(s, lam_next)   # stacked adjoint slopes l_{n,i}
     gtheta = None
     dep = lam_next  # scheduling dependency chain (see module docstring)
     for i in reversed(range(s)):
-        # --- Eq. (7): Lambda_{n,i} from l_{n,j}, j > i ------------------
-        terms = []
-        for j in range(i + 1, s):
-            if a[j][i] == 0.0:
-                continue
-            if b[i] != 0.0:
-                coef = -(h * btilde(j)) * (a[j][i] / b[i])
-            else:
-                coef = -btilde(j) * a[j][i]
-            terms.append((coef, ls[j]))
-        if b[i] != 0.0:
-            Lam_i = tree_scale_add(lam_next, terms)
-        else:
-            Lam_i = tree_scale_add(_tree_zeros(lam_next), terms)
+        # --- Eq. (7): Lambda_{n,i} from the slope-buffer suffix L[i+1:] --
+        Lam_i = combiner.lambda_stage(lam_next, L, h, i)
         # --- Alg.2 lines 10-12: one VJP of one network evaluation -------
         Xi = _barrier_with(Xs[i], dep)
         t_i = t_n + c[i] * h
         _, vjp_fn = jax.vjp(lambda X, th: f(X, t_i, th), Xi, params)
         xbar, thbar = vjp_fn(Lam_i)
-        ls[i] = jax.tree_util.tree_map(jnp.negative, xbar)
+        l_i = jax.tree_util.tree_map(jnp.negative, xbar)
+        L = set_stage(L, i, l_i)
         bt_i = btilde(i)
         contrib = jax.tree_util.tree_map(
             lambda g: jnp.asarray(bt_i, dtype=g.dtype) * g, thbar)
         gtheta = contrib if gtheta is None else _tree_add(gtheta, contrib)
-        dep = ls[i]
+        dep = l_i
     # --- lambda_n = lambda_{n+1} - h sum_i btilde_i l_{n,i} --------------
-    lam_n = tree_scale_add(
-        lam_next, [(-(h * btilde(i)), ls[i]) for i in range(s)])
+    lam_n = combiner.lambda_update(lam_next, L, h)
     # grad_theta step contribution: + h sum_i btilde_i (df/dtheta)^T Lambda_i
     gtheta = jax.tree_util.tree_map(
         lambda g: jnp.asarray(h, dtype=g.dtype) * g, gtheta)
@@ -113,26 +110,30 @@ def symplectic_step_adjoint(f: VectorField, tab: ButcherTableau,
 # Fixed-grid driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def odeint_symplectic(f: VectorField, tab: ButcherTableau, n_steps: int,
-                      x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+                      combine_backend: str, x0, t0, t1, params):
+    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                         combine_backend)
     return sol.x_final
 
 
-def _sym_fwd(f, tab, n_steps, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params)
+def _sym_fwd(f, tab, n_steps, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+                         combine_backend)
     # Residuals = Algorithm 1's checkpoints only.
     return sol.x_final, (sol.xs, sol.ts, sol.h, params)
 
 
-def _sym_bwd(f, tab, n_steps, res, lam_N):
+def _sym_bwd(f, tab, n_steps, combine_backend, res, lam_N):
     xs, ts, h, params = res
+    combiner = get_combiner(tab, combine_backend)
 
     def body(carry, inputs):
         lam, gtheta = carry
         x_n, t_n = inputs
-        lam, gstep = symplectic_step_adjoint(f, tab, x_n, t_n, h, params, lam)
+        lam, gstep = symplectic_step_adjoint(f, tab, x_n, t_n, h, params,
+                                             lam, combiner)
         return (lam, _tree_add(gtheta, gstep)), None
 
     rev = jax.tree_util.tree_map(lambda l: jnp.flip(l, axis=0), (xs, ts))
@@ -148,21 +149,25 @@ odeint_symplectic.defvjp(_sym_fwd, _sym_bwd)
 # Adaptive driver (bounded checkpoint buffer, masked reverse scan)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def odeint_symplectic_adaptive(f: VectorField, tab: ButcherTableau,
-                               cfg: AdaptiveConfig, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg)
+                               cfg: AdaptiveConfig, combine_backend: str,
+                               x0, t0, t1, params):
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+                            combine_backend)
     return sol.x_final
 
 
-def _syma_fwd(f, tab, cfg, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg)
+def _syma_fwd(f, tab, cfg, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+                            combine_backend)
     res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params)
     return sol.x_final, res
 
 
-def _syma_bwd(f, tab, cfg, res, lam_N):
+def _syma_bwd(f, tab, cfg, combine_backend, res, lam_N):
     xs, ts, hs, n_acc, params = res
+    combiner = get_combiner(tab, combine_backend)
 
     def body(carry, inputs):
         lam, gtheta = carry
@@ -171,7 +176,7 @@ def _syma_bwd(f, tab, cfg, res, lam_N):
 
         def live(_):
             lam2, gstep = symplectic_step_adjoint(
-                f, tab, x_n, t_n, h_n, params, lam)
+                f, tab, x_n, t_n, h_n, params, lam, combiner)
             return lam2, _tree_add(gtheta, gstep)
 
         def dead(_):

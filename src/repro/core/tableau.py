@@ -11,6 +11,7 @@ directly and handles b_i == 0 stages via the paper's Eq. (7)/(8) I0 set.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from fractions import Fraction
 from typing import Optional, Tuple
 
@@ -60,6 +61,31 @@ class ButcherTableau:
 
     def c_np(self, dtype=np.float64) -> np.ndarray:
         return np.array(self.c, dtype=dtype)
+
+    # Dense coefficient arrays alongside the Python tuples.  The solver
+    # stack (core/combine.py) consumes these; they are host-side numpy so
+    # they enter jit traces as constants in whatever precision the trace
+    # runs at (f64 under jax_enable_x64, f32 otherwise).  cached_property
+    # writes straight to __dict__, which bypasses the frozen-dataclass
+    # __setattr__ guard, so each array is built once per tableau.
+
+    @functools.cached_property
+    def a_dense(self) -> np.ndarray:
+        return np.array(self.a, dtype=np.float64)
+
+    @functools.cached_property
+    def b_dense(self) -> np.ndarray:
+        return np.array(self.b, dtype=np.float64)
+
+    @functools.cached_property
+    def c_dense(self) -> np.ndarray:
+        return np.array(self.c, dtype=np.float64)
+
+    @functools.cached_property
+    def b_err_dense(self) -> Optional[np.ndarray]:
+        if self.b_err is None:
+            return None
+        return np.array(self.b_err, dtype=np.float64)
 
 
 def _frac_rows(rows, s):

@@ -1,12 +1,27 @@
 """Pallas TPU kernels for the perf-critical hot spots, with jnp oracles.
 
-  butcher_combine — fused RK stage combination (the paper's Eq. 5 hot loop)
-  rms_norm        — fused residual + RMSNorm
-  attention       — flash attention (causal, GQA, sliding window, decode)
+  butcher_combine      — fused RK stage combination (the paper's Eq. 5 hot
+                         loop): one coefficient row against a stacked
+                         (s, rows, 128) slope buffer in a single HBM pass
+  butcher_combine_rows — multi-row variant: m rows of a Butcher matrix
+                         (e.g. [b; b_err] with base scales [1; 0]) from ONE
+                         read of (x, ks) — fuses the step update with the
+                         embedded error estimate
+  rms_norm             — fused residual + RMSNorm
+  attention            — flash attention (causal, GQA, sliding window, decode)
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper
 with TPU/oracle dispatch), ref.py (pure-jnp oracle).
-"""
-from .ops import attention, butcher_combine, rms_norm
 
-__all__ = ["attention", "butcher_combine", "rms_norm"]
+The butcher_combine kernels are the solver hot path: core/combine.py's
+StageCombiner routes every RK stage linear combination — forward stage
+states, the step update, the embedded error, and the symplectic-adjoint
+backward Lambda/lambda recursions — through them whenever
+``combine_backend`` resolves to "pallas" (the default on TPU backends).
+The oracles accumulate in float32 in the same stage order as the kernels,
+so interpret-mode runs match the oracles bit-for-bit.
+"""
+from .ops import attention, butcher_combine, butcher_combine_rows, rms_norm
+
+__all__ = ["attention", "butcher_combine", "butcher_combine_rows",
+           "rms_norm"]

@@ -1,6 +1,14 @@
-"""Pallas TPU kernel: fused Runge-Kutta stage combination.
+"""Pallas TPU kernels: fused Runge-Kutta stage combination.
 
-Computes  out = x + h * sum_i coefs[i] * ks[i]  in a single pass over HBM.
+Two variants over a stacked slope buffer ``ks`` with leading stage dim s:
+
+  * ``butcher_combine_pallas``      — one coefficient ROW:
+        out = x + h * sum_i coefs[i] * ks[i]
+  * ``butcher_combine_rows_pallas`` — m rows of a Butcher matrix at once:
+        out[r] = base_scale[r] * x + h * sum_i coefs[r, i] * ks[i]
+    (one read of (x, ks) produces all m outputs — e.g. the step update and
+    the embedded error estimate in a single pass, rows = [b; b_err] with
+    base_scale = [1; 0]).
 
 Why it matters for the paper: the RK update (Eq. 5) applies `s` AXPY chains
 per step — with dopri5 that is up to 7 reads of the full state per stage
@@ -8,10 +16,16 @@ combination, repeated `N` times forward and ~3N times in the symplectic
 backward pass.  The chain is purely memory-bound (arithmetic intensity
 ~ s FLOPs / (s+2) * 4 bytes < 1), so fusing it into one VMEM-tiled kernel
 turns s+2 HBM passes into exactly one read of (x, ks) and one write of out.
+The solver hot loop reaches these kernels through core/combine.py's
+StageCombiner (``combine_backend="pallas"`` / "auto" on TPU).
 
 Tiling: the state is reshaped to (rows, 128) lanes; each grid step processes
 a (block_rows, 128) tile of x and the matching (s, block_rows, 128) tile of
 ks — the (8, 128) float32 VREG layout and VMEM budget set block_rows.
+
+Accumulation is float32, strictly in stage order i = 0..s-1 — the jnp
+oracles in ref.py use the identical order, so interpret-mode kernel runs
+match the oracles bit-for-bit (asserted in tests).
 """
 from __future__ import annotations
 
@@ -22,6 +36,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 LANE = 128
+
+
+def _pad_to_tiles(x, ks, block_rows):
+    """Flatten x/(s,)+x to lane-tiled 2-D/3-D buffers, zero-padded."""
+    s = ks.shape[0]
+    n = x.size
+    rows = -(-n // LANE)  # ceil
+    rows_pad = -(-rows // block_rows) * block_rows
+    pad = rows_pad * LANE - n
+    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_pad, LANE)
+    kf = jnp.pad(ks.reshape(s, -1), ((0, 0), (0, pad))) \
+        .reshape(s, rows_pad, LANE)
+    return xf, kf, rows_pad, n
 
 
 def _kernel(coef_ref, x_ref, ks_ref, o_ref, *, s: int):
@@ -42,14 +69,7 @@ def butcher_combine_pallas(x: jnp.ndarray, ks: jnp.ndarray,
     """x: (...,); ks: (s, ...); coefs: (s,); h: scalar."""
     s = ks.shape[0]
     orig_shape = x.shape
-    n = x.size
-    rows = -(-n // LANE)  # ceil
-    rows_pad = -(-rows // block_rows) * block_rows
-    pad = rows_pad * LANE - n
-
-    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(rows_pad, LANE)
-    kf = jnp.pad(ks.reshape(s, -1), ((0, 0), (0, pad))) \
-        .reshape(s, rows_pad, LANE)
+    xf, kf, rows_pad, n = _pad_to_tiles(x, ks, block_rows)
     hc = (h * coefs).astype(jnp.float32)
 
     grid = (rows_pad // block_rows,)
@@ -67,3 +87,49 @@ def butcher_combine_pallas(x: jnp.ndarray, ks: jnp.ndarray,
         interpret=interpret,
     )(hc, xf, kf)
     return out.reshape(-1)[:n].reshape(orig_shape)
+
+
+def _rows_kernel(coef_ref, scale_ref, x_ref, ks_ref, o_ref,
+                 *, s: int, m: int):
+    x = x_ref[...].astype(jnp.float32)
+    for r in range(m):  # unrolled: m is tiny (2 for update+error)
+        acc = scale_ref[r].astype(jnp.float32) * x
+        for i in range(s):
+            acc = acc + coef_ref[r, i].astype(jnp.float32) * \
+                ks_ref[i].astype(jnp.float32)
+        o_ref[r, :, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def butcher_combine_rows_pallas(x: jnp.ndarray, ks: jnp.ndarray,
+                                coefs: jnp.ndarray, base_scale: jnp.ndarray,
+                                h: jnp.ndarray, *, block_rows: int = 256,
+                                interpret: bool = True) -> jnp.ndarray:
+    """x: (...,); ks: (s, ...); coefs: (m, s); base_scale: (m,); h: scalar.
+
+    Returns (m,) + x.shape; out[r] = base_scale[r]*x + h*sum_i coefs[r,i]*ks[i].
+    """
+    s = ks.shape[0]
+    m = coefs.shape[0]
+    orig_shape = x.shape
+    xf, kf, rows_pad, n = _pad_to_tiles(x, ks, block_rows)
+    hc = (h * coefs).astype(jnp.float32)
+    sc = base_scale.astype(jnp.float32)
+
+    grid = (rows_pad // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(_rows_kernel, s=s, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, s), lambda r: (0, 0)),              # coefs
+            pl.BlockSpec((m,), lambda r: (0,)),                  # base_scale
+            pl.BlockSpec((block_rows, LANE), lambda r: (r, 0)),  # x tile
+            pl.BlockSpec((s, block_rows, LANE),
+                         lambda r: (0, r, 0)),                   # ks tile
+        ],
+        out_specs=pl.BlockSpec((m, block_rows, LANE), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, rows_pad, LANE), x.dtype),
+        interpret=interpret,
+    )(hc, sc, xf, kf)
+    return out.reshape(m, -1)[:, :n].reshape((m,) + orig_shape)

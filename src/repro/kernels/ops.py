@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .butcher_combine import butcher_combine_pallas
+from .butcher_combine import (butcher_combine_pallas,
+                              butcher_combine_rows_pallas)
 from .flash_attention import flash_attention_pallas
 from .rmsnorm import rms_norm_pallas
 
@@ -32,6 +33,19 @@ def butcher_combine(x, ks, coefs, h, *, use_pallas: Optional[bool] = None):
                                       jnp.asarray(h),
                                       interpret=not _on_tpu())
     return ref.butcher_combine_ref(x, ks, jnp.asarray(coefs), jnp.asarray(h))
+
+
+def butcher_combine_rows(x, ks, coefs, base_scale, h, *,
+                         use_pallas: Optional[bool] = None):
+    """Multi-row stage combine: (m,)+x.shape outputs from ONE read of (x, ks)."""
+    if _resolve(use_pallas):
+        return butcher_combine_rows_pallas(x, ks, jnp.asarray(coefs),
+                                           jnp.asarray(base_scale),
+                                           jnp.asarray(h),
+                                           interpret=not _on_tpu())
+    return ref.butcher_combine_rows_ref(x, ks, jnp.asarray(coefs),
+                                        jnp.asarray(base_scale),
+                                        jnp.asarray(h))
 
 
 def rms_norm(x, weight, residual=None, *, eps: float = 1e-6,

@@ -17,11 +17,36 @@ def butcher_combine_ref(x: jnp.ndarray, ks: jnp.ndarray,
     """x + h * sum_i coefs[i] * ks[i].
 
     x: (...,), ks: (s, ...), coefs: (s,). The RK stage-combination hot loop
-    (Eq. 5) fused into a single HBM pass.
+    (Eq. 5) fused into a single HBM pass.  Accumulates in float32 strictly
+    in stage order — the exact sequence the Pallas kernel executes, so
+    interpret-mode kernel runs match this oracle bit-for-bit.
     """
     hc = (h * coefs).astype(jnp.float32)
-    acc = jnp.tensordot(hc, ks.astype(jnp.float32), axes=(0, 0))
-    return (x.astype(jnp.float32) + acc).astype(x.dtype)
+    acc = x.astype(jnp.float32)
+    for i in range(ks.shape[0]):
+        acc = acc + hc[i] * ks[i].astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def butcher_combine_rows_ref(x: jnp.ndarray, ks: jnp.ndarray,
+                             coefs: jnp.ndarray, base_scale: jnp.ndarray,
+                             h: jnp.ndarray) -> jnp.ndarray:
+    """Multi-row combine: out[r] = base_scale[r]*x + h*sum_i coefs[r,i]*ks[i].
+
+    x: (...,), ks: (s, ...), coefs: (m, s), base_scale: (m,).  Returns
+    (m,) + x.shape.  Same f32 stage-order accumulation as the Pallas kernel
+    (bit-for-bit in interpret mode).
+    """
+    hc = (h * coefs).astype(jnp.float32)
+    sc = base_scale.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    outs = []
+    for r in range(coefs.shape[0]):
+        acc = sc[r] * xf
+        for i in range(ks.shape[0]):
+            acc = acc + hc[r, i] * ks[i].astype(jnp.float32)
+        outs.append(acc.astype(x.dtype))
+    return jnp.stack(outs)
 
 
 def rms_norm_ref(x: jnp.ndarray, weight: jnp.ndarray,

@@ -31,6 +31,7 @@ class CNFConfig:
     trace: str = "hutchinson"        # "hutchinson" | "exact"
     method: str = "dopri5"
     grad_mode: str = "symplectic"
+    combine_backend: str = "auto"    # stage-combine dispatch (core/combine.py)
     n_steps: int = 16
     adaptive: bool = False
     rtol: float = 1e-6
@@ -103,7 +104,8 @@ def cnf_forward(params, u, eps, cfg: CNFConfig):
         x, dlp_i, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
                              t0=0.0, t1=cfg.t1, method=cfg.method,
                              grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
-                             adaptive=adaptive)
+                             adaptive=adaptive,
+                             combine_backend=cfg.combine_backend)
         dlp = dlp + dlp_i
     return x, dlp
 

@@ -32,6 +32,20 @@ from repro.nn.norm import init_rmsnorm, rmsnorm
 from .blocks import init_layer, init_layer_cache, layer_forward
 
 
+@jax.custom_jvp
+def _barrier_leaves(leaves):
+    return jax.lax.optimization_barrier(leaves)
+
+
+@_barrier_leaves.defjvp
+def _barrier_leaves_jvp(primals, tangents):
+    # optimization_barrier has no differentiation rule; the barrier only
+    # needs to pin the PRIMAL slices in the loop body, so tangents pass
+    # through as the identity (linear, hence reverse-mode transposable).
+    (leaves,), (dleaves,) = primals, tangents
+    return jax.lax.optimization_barrier(leaves), dleaves
+
+
 def _loop_barrier(tree):
     """Opaque identity on a scan body's sliced inputs.
 
@@ -43,7 +57,7 @@ def _loop_barrier(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     if not leaves:
         return tree
-    leaves = jax.lax.optimization_barrier(leaves)
+    leaves = _barrier_leaves(leaves)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
@@ -246,4 +260,5 @@ def _node_depth_solve(params, cfg: ArchConfig, x, shard):
 
     return odeint(field, x, params["unit"], t0=0.0, t1=1.0,
                   method=cfg.node.method, grad_mode=cfg.node.grad_mode,
-                  n_steps=n_steps)
+                  n_steps=n_steps,
+                  combine_backend=cfg.node.combine_backend)

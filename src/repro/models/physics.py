@@ -31,6 +31,7 @@ class PhysicsConfig:
     system: str = "kdv"            # "kdv" | "cahn_hilliard"
     method: str = "dopri8"
     grad_mode: str = "symplectic"
+    combine_backend: str = "auto"  # stage-combine dispatch (core/combine.py)
     n_steps: int = 4
     dt: float = 0.1                # snapshot interval
 
@@ -89,7 +90,8 @@ def hnn_field(system: str, dx: float):
 def predict_next(params, u, cfg: PhysicsConfig):
     return odeint(hnn_field(cfg.system, cfg.dx), u, params, t0=0.0,
                   t1=cfg.dt, method=cfg.method, grad_mode=cfg.grad_mode,
-                  n_steps=cfg.n_steps)
+                  n_steps=cfg.n_steps,
+                  combine_backend=cfg.combine_backend)
 
 
 def physics_loss(params, u_k, u_k1, cfg: PhysicsConfig):

@@ -9,7 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal container: run fixed examples instead
+    from hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.butcher_combine import butcher_combine_pallas

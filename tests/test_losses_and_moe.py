@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal container: run fixed examples instead
+    from hypothesis_compat import given, settings, st
 
 from repro.nn.moe import MoEConfig, init_moe, moe_ffn
 from repro.train.losses import IGNORE, lm_loss, lm_loss_chunked

@@ -124,9 +124,9 @@ def test_elastic_reshard_cpu():
     """Restoring onto a different device layout: single-device roundtrip
     via explicit shardings (the multi-chip path is the same code)."""
     from repro.runtime import reshard_state
+    from repro.launch.mesh import make_mesh_compat
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((1,), ("data",))
     s = _state()
     specs = jax.tree_util.tree_map(lambda _: P(), s)
     out = reshard_state(s, mesh, specs)

@@ -1,0 +1,319 @@
+"""Exactness tests for the stacked-stage StageCombiner refactor.
+
+Covers the PR's acceptance criteria:
+  * for every registered tableau, symplectic gradients through the new
+    stacked-stage path match jax.grad of the discrete forward map to
+    rounding error (f64), on fixed grids AND on adaptive grids (via replay
+    of the realized step sequence, since while_loop is not reverse-diff);
+  * the Pallas combiner kernels (interpret mode) match the jnp oracles to
+    final rounding on odd/padded shapes — identical f32 accumulation order,
+    so the only permitted divergence is compiler FMA contraction of a
+    mul+add pair (< 2 ulp of the result scale);
+  * the combiner backend is actually exercised by odeint (butcher_combine
+    is solver hot path, not dead code);
+  * the fixed-grid driver skips the embedded error estimate (and its extra
+    network evaluation for err_uses_fsal tableaus).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import TABLEAUS, AdaptiveConfig, get_combiner, odeint
+from repro.core.combine import alloc_stages, set_stage
+from repro.core.rk import rk_solve_fixed, rk_step, tree_scale_add
+from repro.core.tableau import get_tableau
+from repro.kernels import ops, ref
+from repro.kernels.butcher_combine import (butcher_combine_pallas,
+                                           butcher_combine_rows_pallas)
+
+ALL_METHODS = sorted(TABLEAUS)
+ADAPTIVE_METHODS = [n for n in ALL_METHODS if TABLEAUS[n].b_err is not None]
+
+
+def mlp_field(x, t, params):
+    h = jnp.tanh(params["w1"] @ x + params["b1"] + t)
+    return params["w2"] @ h + params["b2"]
+
+
+def mlp_field_f32(x, t, params):
+    # keep the field's output dtype pinned to the (f32) state dtype even
+    # under jax_enable_x64, where the solver's t is f64
+    return mlp_field(x, jnp.asarray(t).astype(x.dtype), params)
+
+
+def make_params(key, dim=4, hidden=6):
+    ks = jax.random.split(key, 4)
+    return {
+        "w1": jax.random.normal(ks[0], (hidden, dim)) * 0.5,
+        "b1": jax.random.normal(ks[1], (hidden,)) * 0.1,
+        "w2": jax.random.normal(ks[2], (dim, hidden)) * 0.5,
+        "b2": jax.random.normal(ks[3], (dim,)) * 0.1,
+    }
+
+
+# --- combiner vs the unfused chained-AXPY reference --------------------------
+
+@pytest.mark.parametrize("method", ["dopri5", "dopri8", "rk4"])
+def test_combiner_solution_matches_chained_axpy(method):
+    tab = get_tableau(method)
+    comb = get_combiner(tab, "jnp")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (17,))
+    K = alloc_stages(tab.s, x)
+    ks = []
+    for i in range(tab.s):
+        k_i = jax.random.normal(jax.random.PRNGKey(10 + i), (17,))
+        ks.append(k_i)
+        K = set_stage(K, i, k_i)
+    h = jnp.asarray(0.125)
+    got = comb.solution(x, K, h)
+    want = tree_scale_add(x, [(tab.b[i], h * ks[i]) for i in range(tab.s)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-14, atol=1e-14)
+
+
+def test_solution_and_error_fused_matches_separate():
+    tab = get_tableau("dopri5")
+    comb = get_combiner(tab, "jnp")
+    x = jax.random.normal(jax.random.PRNGKey(1), (33,))
+    K = alloc_stages(tab.s, x)
+    for i in range(tab.s):
+        K = set_stage(K, i, jax.random.normal(jax.random.PRNGKey(i), (33,)))
+    h = jnp.asarray(0.2)
+    x_next, err = comb.solution_and_error(x, K, h)
+    np.testing.assert_allclose(np.asarray(x_next),
+                               np.asarray(comb.solution(x, K, h)),
+                               rtol=1e-14)
+    np.testing.assert_allclose(np.asarray(err),
+                               np.asarray(comb.error(x, K, h)),
+                               rtol=1e-13, atol=1e-15)
+
+
+# --- gradient exactness through the stacked-stage path -----------------------
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_symplectic_matches_jax_grad_fixed_grid(method):
+    params = make_params(jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (4,))
+
+    def loss(x0, params, mode):
+        y = odeint(mlp_field, x0, params, t0=0.0, t1=1.0, method=method,
+                   grad_mode=mode, n_steps=5, combine_backend="jnp")
+        return jnp.sum(jnp.sin(y) ** 2)
+
+    g_ref = jax.grad(loss, argnums=(0, 1))(x0, params, "backprop")
+    g_sym = jax.grad(loss, argnums=(0, 1))(x0, params, "symplectic")
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_sym)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-12)
+
+
+@pytest.mark.parametrize("method,rtol", [
+    ("heun12", 1e-3), ("bosh3", 1e-5), ("dopri5", 1e-6),
+    ("fehlberg45", 1e-7), ("dopri8", 1e-7)])
+def test_symplectic_matches_jax_grad_adaptive_grid(method, rtol):
+    """Adaptive forward + symplectic backward == jax.grad of the REALIZED
+    discrete map, for every tableau with an embedded error estimate.  The
+    reference replays the recorded accepted {t_n, h_n} sequence as a
+    differentiable unrolled solve (while_loop is not reverse-diff)."""
+    from repro.core.rk import rk_solve_adaptive
+
+    tab = get_tableau(method)
+    params = make_params(jax.random.PRNGKey(4))
+    x0 = jax.random.normal(jax.random.PRNGKey(5), (4,))
+    cfg = AdaptiveConfig(rtol=rtol, atol=rtol * 1e-2, max_steps=128,
+                         initial_step=0.05)
+
+    sol = rk_solve_adaptive(mlp_field, tab, x0, 0.0, 0.5, params, cfg)
+    n_acc = int(sol.n_accepted)
+    assert 0 < n_acc < cfg.max_steps
+    ts = np.asarray(sol.ts)[:n_acc]
+    hs = np.asarray(sol.hs)[:n_acc]
+
+    def loss_replay(x0, params):
+        x = x0
+        for t, h in zip(ts, hs):
+            x, _ = rk_step(mlp_field, tab, x, jnp.asarray(t),
+                           jnp.asarray(h), params)
+        return jnp.sum(jnp.tanh(x) ** 2)
+
+    def loss_sym(x0, params):
+        y = odeint(mlp_field, x0, params, t0=0.0, t1=0.5, method=method,
+                   grad_mode="symplectic", adaptive=cfg)
+        return jnp.sum(jnp.tanh(y) ** 2)
+
+    g_ref = jax.grad(loss_replay, argnums=(0, 1))(x0, params)
+    g_sym = jax.grad(loss_sym, argnums=(0, 1))(x0, params)
+    for a, b in zip(jax.tree_util.tree_leaves(g_ref),
+                    jax.tree_util.tree_leaves(g_sym)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-9, atol=1e-11)
+
+
+def test_symplectic_pallas_backend_gradient_f32():
+    """The Pallas-kernel combine path (f32 accumulate) stays within f32
+    tolerance of the f64 jnp path on both forward and gradient."""
+    params = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), make_params(jax.random.PRNGKey(2)))
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (4,), dtype=jnp.float32)
+
+    def loss(x0, backend):
+        y = odeint(mlp_field_f32, x0, params, method="bosh3",
+                   grad_mode="symplectic", n_steps=3,
+                   combine_backend=backend)
+        return jnp.sum(y ** 2)
+
+    y_p, y_j = loss(x0, "pallas"), loss(x0, "jnp")
+    np.testing.assert_allclose(float(y_p), float(y_j), rtol=1e-5)
+    g_p = jax.grad(loss)(x0, "pallas")
+    g_j = jax.grad(loss)(x0, "jnp")
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_j),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_backprop_differentiates_through_pallas_kernel():
+    """grad through rk_solve_fixed with the Pallas backend (the combine
+    custom-JVP) matches the jnp backend."""
+    params = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), make_params(jax.random.PRNGKey(6)))
+    x0 = jax.random.normal(jax.random.PRNGKey(7), (4,), dtype=jnp.float32)
+
+    def loss(x0, backend):
+        y = odeint(mlp_field_f32, x0, params, method="rk4",
+                   grad_mode="backprop", n_steps=2, combine_backend=backend)
+        return jnp.sum(y ** 2)
+
+    g_p = jax.grad(loss)(x0, "pallas")
+    g_j = jax.grad(loss)(x0, "jnp")
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_j),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grad_through_pallas_multirow_error_path():
+    """rk_step with an embedded error estimate routes through the multi-row
+    kernel (solution_and_error); it must stay reverse-differentiable under
+    the Pallas backend (the adaptive replay tests differentiate rk_step
+    with the default combiner, which is the Pallas path on TPU)."""
+    tab = get_tableau("dopri5")
+    params = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), make_params(jax.random.PRNGKey(8)))
+    x0 = jax.random.normal(jax.random.PRNGKey(9), (4,), dtype=jnp.float32)
+    h = jnp.float32(0.1)
+
+    def loss(x0, backend):
+        comb = get_combiner(tab, backend)
+        x1, err = rk_step(mlp_field_f32, tab, x0, jnp.float32(0.0), h,
+                          params, comb, with_error=True)
+        return jnp.sum(x1 ** 2) + jnp.sum(err ** 2)
+
+    g_p = jax.grad(loss)(x0, "pallas")
+    g_j = jax.grad(loss)(x0, "jnp")
+    np.testing.assert_allclose(np.asarray(g_p), np.asarray(g_j),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --- the kernel is the hot path, not dead code -------------------------------
+
+def test_odeint_exercises_combiner_backend(monkeypatch):
+    """odeint(combine_backend="pallas") must route stage combination through
+    kernels.ops.butcher_combine — forward AND symplectic backward."""
+    calls = []
+    orig = ops.butcher_combine
+
+    def spy(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "butcher_combine", spy)
+    params = jax.tree_util.tree_map(
+        lambda l: l.astype(jnp.float32), make_params(jax.random.PRNGKey(8)))
+    x0 = jax.random.normal(jax.random.PRNGKey(9), (4,), dtype=jnp.float32)
+
+    def loss(x0):
+        y = odeint(mlp_field_f32, x0, params, method="rk4",
+                   grad_mode="symplectic", n_steps=2,
+                   combine_backend="pallas")
+        return jnp.sum(y ** 2)
+
+    n0 = len(calls)
+    loss(x0)
+    n_fwd = len(calls) - n0
+    assert n_fwd > 0, "forward solve did not reach butcher_combine"
+    jax.grad(loss)(x0)
+    assert len(calls) - n0 - n_fwd > 0, \
+        "symplectic backward did not reach butcher_combine"
+
+
+# --- Pallas kernels vs jnp oracles on odd/padded shapes ----------------------
+
+def _final_rounding_atol(*arrays):
+    scale = max(float(np.max(np.abs(np.asarray(a, np.float32)))) or 1.0
+                for a in arrays)
+    return 2 * np.finfo(np.float32).eps * max(scale, 1.0)
+
+
+@pytest.mark.parametrize("n,s", [(1, 1), (129, 4), (257, 7), (1000, 13),
+                                 (231, 6)])
+def test_pallas_row_kernel_matches_oracle_odd_shapes(n, s):
+    """Identical f32 stage-order accumulation: any divergence is compiler
+    FMA contraction of one mul+add, bounded by final rounding (2 ulp at
+    result scale)."""
+    k = jax.random.split(jax.random.PRNGKey(n + s), 3)
+    x = jax.random.normal(k[0], (n,), dtype=jnp.float32)
+    ks = jax.random.normal(k[1], (s, n), dtype=jnp.float32)
+    coefs = jax.random.normal(k[2], (s,), dtype=jnp.float32)
+    h = jnp.float32(0.37)
+    got = np.asarray(butcher_combine_pallas(x, ks, coefs, h, interpret=True))
+    want = np.asarray(ref.butcher_combine_ref(x, ks, coefs, h))
+    np.testing.assert_allclose(got, want, rtol=0,
+                               atol=_final_rounding_atol(want, x, ks))
+
+
+@pytest.mark.parametrize("n,s", [(1, 1), (129, 4), (1000, 13), (231, 7)])
+def test_pallas_rows_kernel_matches_oracle_odd_shapes(n, s):
+    k = jax.random.split(jax.random.PRNGKey(n * 3 + s), 3)
+    x = jax.random.normal(k[0], (n,), dtype=jnp.float32)
+    ks = jax.random.normal(k[1], (s, n), dtype=jnp.float32)
+    coefs = jax.random.normal(k[2], (2, s), dtype=jnp.float32)
+    scale = jnp.asarray([1.0, 0.0], jnp.float32)
+    h = jnp.float32(0.21)
+    got = np.asarray(butcher_combine_rows_pallas(x, ks, coefs, scale, h,
+                                                 interpret=True))
+    want = np.asarray(ref.butcher_combine_rows_ref(x, ks, coefs, scale, h))
+    assert got.shape == (2, n)
+    np.testing.assert_allclose(got, want, rtol=0,
+                               atol=_final_rounding_atol(want, x, ks))
+
+
+# --- fixed-grid drivers skip the embedded error estimate ---------------------
+
+@pytest.mark.parametrize("method", ["dopri5", "dopri8"])
+def test_fixed_grid_skips_error_estimate(method):
+    """rk_solve_fixed must evaluate f exactly s times per step: no error
+    combine, and (for err_uses_fsal tableaus like dopri8) no wasted extra
+    f(x_{n+1}) evaluation."""
+    tab = get_tableau(method)
+    params = make_params(jax.random.PRNGKey(0))
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (4,))
+    count = []
+
+    def counting_field(x, t, p):
+        count.append(1)
+        return mlp_field(x, t, p)
+
+    rk_solve_fixed(counting_field, tab, x0, 0.0, 1.0, 3, params)
+    # scan traces the step body once: s trace-time calls, not s+1.
+    assert len(count) == tab.s, (method, len(count), tab.s)
+
+    # the adaptive path must still produce the estimate
+    _, err = rk_step(mlp_field, tab, x0, jnp.asarray(0.0), jnp.asarray(0.1),
+                     params, with_error=True)
+    assert err is not None
+    # and rk_step with_error=False must not
+    _, err2 = rk_step(mlp_field, tab, x0, jnp.asarray(0.0), jnp.asarray(0.1),
+                      params, with_error=False)
+    assert err2 is None
