@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.data.tabular import PAPER_DIMS, PAPER_M, make_tabular_dataset
 from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
-from .common import live_bytes, row, time_call
+from .common import live_bytes, row, smoke, time_call
 
 MODES = ["backprop", "remat_solve", "remat_step", "adjoint", "symplectic"]
 MODE_LABEL = {"backprop": "backprop", "remat_solve": "baseline",
@@ -62,7 +62,10 @@ def run(dataset: str = "gas", batch: int = 256, steps: int = 60,
 
 
 def main():
-    run("gas")
+    if smoke():
+        run("gas", batch=32, steps=2, n_steps=2)
+    else:
+        run("gas")
 
 
 if __name__ == "__main__":

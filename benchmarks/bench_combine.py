@@ -25,7 +25,7 @@ from repro.core.combine import alloc_stages, get_combiner, set_stage
 from repro.core.rk import rk_solve_fixed, tree_scale_add
 from repro.core.tableau import get_tableau
 from repro.kernels.butcher_combine import butcher_combine_pallas
-from .common import live_bytes, row, time_call
+from .common import live_bytes, row, smoke, time_call
 
 PALLAS_N = 1 << 14   # interpret mode is a python-driven interpreter: keep small
 
@@ -97,7 +97,10 @@ def run(sizes=(1 << 16, 1 << 20), method: str = "dopri5"):
 
 
 def main():
-    run()
+    if smoke():
+        run(sizes=(1 << 12,))
+    else:
+        run()
 
 
 if __name__ == "__main__":

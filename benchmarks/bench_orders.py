@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
-from .common import live_bytes, row
+from .common import live_bytes, row, smoke
 
 MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
 
@@ -37,16 +37,22 @@ def _ratio(xs, ys):
 
 
 def run():
+    if smoke():
+        ns, meths, s_xs, hs = (4, 8), ("heun12", "bosh3"), [2, 4], (16, 32)
+        h_fix, kw = 16, dict(dim=4, batch=16)
+    else:
+        ns, meths, s_xs = (8, 16, 32), ("heun12", "bosh3", "dopri5"), \
+            [2, 4, 7]
+        hs, h_fix, kw = (64, 128, 256), 128, {}
     out = {}
     for mode in MODES:
-        mn = [_mem(mode, "dopri5", n, 128) for n in (8, 16, 32)]
-        ms = [_mem(mode, meth, 8, 128)
-              for meth in ("heun12", "bosh3", "dopri5")]
-        ml = [_mem(mode, "dopri5", 8, h) for h in (64, 128, 256)]
+        mn = [_mem(mode, "dopri5", n, h_fix, **kw) for n in ns]
+        ms = [_mem(mode, meth, 8, h_fix, **kw) for meth in meths]
+        ml = [_mem(mode, "dopri5", 8, h, **kw) for h in hs]
         out[mode] = {
-            "N_exp": _ratio([8, 16, 32], mn),
-            "s_exp": _ratio([2, 4, 7], ms),
-            "L_exp": _ratio([64, 128, 256], ml),
+            "N_exp": _ratio(list(ns), mn),
+            "s_exp": _ratio(s_xs, ms),
+            "L_exp": _ratio(list(hs), ml),
         }
         row(f"orders_{mode}", 0.0,
             f"dlogM/dlogN={out[mode]['N_exp']:.2f};"

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.data.tabular import make_tabular_dataset
 from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
-from .common import live_bytes, row, time_call
+from .common import live_bytes, row, smoke, time_call
 
 METHODS = [("heun12", 2), ("bosh3", 3), ("dopri5", 6), ("dopri8", 12)]
 MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
@@ -45,7 +45,10 @@ def run(batch: int = 256, n_steps: int = 8):
 
 
 def main():
-    run()
+    if smoke():
+        run(batch=16, n_steps=2)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.cnf import CNFConfig, cnf_nll, init_cnf
-from .common import live_bytes, row
+from .common import live_bytes, row, smoke
 
 MODES = ["backprop", "remat_step", "adjoint", "symplectic"]
 MODE_LABEL = {"backprop": "backprop", "remat_step": "ACA",
@@ -20,14 +20,15 @@ MODE_LABEL = {"backprop": "backprop", "remat_step": "ACA",
 NS = [4, 8, 16, 32]
 
 
-def run(dim: int = 16, batch: int = 512):
+def run(dim: int = 16, batch: int = 512, ns=tuple(NS), hidden: int = 128):
     u = jax.random.normal(jax.random.PRNGKey(0), (batch, dim))
     eps = jax.random.normal(jax.random.PRNGKey(1), (batch, dim))
     out = {}
     for mode in MODES:
         mems = []
-        for n in NS:
-            cfg = CNFConfig(dim=dim, hidden=(128, 128), n_components=1,
+        for n in ns:
+            cfg = CNFConfig(dim=dim, hidden=(hidden, hidden),
+                            n_components=1,
                             method="dopri5", grad_mode=mode, n_steps=n)
             params = init_cnf(jax.random.PRNGKey(0), cfg)
 
@@ -36,7 +37,7 @@ def run(dim: int = 16, batch: int = 512):
                 return jax.value_and_grad(cnf_nll)(params, u, eps, cfg)
 
             mems.append(live_bytes(lg, params, u, eps))
-        slope = np.polyfit(NS, mems, 1)[0]
+        slope = np.polyfit(ns, mems, 1)[0]
         out[mode] = dict(mems=mems, slope=slope)
         row(f"steps_{MODE_LABEL[mode]}", 0.0,
             "mem_mb=" + "/".join(f"{m/2**20:.2f}" for m in mems)
@@ -45,7 +46,10 @@ def run(dim: int = 16, batch: int = 512):
 
 
 def main():
-    run()
+    if smoke():
+        run(dim=4, batch=32, ns=(4, 8), hidden=16)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -8,9 +8,20 @@ optimization step), and it is what a TPU deployment must fit in HBM.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
+
+
+def smoke() -> bool:
+    """True when running under ``benchmarks.run --smoke``.
+
+    Smoke mode shrinks every benchmark to rot-check sizes (seconds, not
+    minutes) so CI can execute the full driver on every push — the numbers
+    are meaningless, the point is that the scripts still run.
+    """
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
 
 
 def time_call(fn, *args, iters: int = 3, warmup: int = 1):

@@ -10,9 +10,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_physics    -> Table 4 (KdV / Cahn-Hilliard, dopri8)
   bench_combine    -> fused vs unfused stage combination (StageCombiner)
   roofline         -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
+
+Usage:
+    python -m benchmarks.run [--smoke] [bench_name]
+
+``--smoke`` sets REPRO_BENCH_SMOKE=1 so every benchmark runs at tiny
+rot-check sizes (CI executes this on every push; see .github/workflows).
 """
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 import time
@@ -32,6 +39,14 @@ def _tolerance_subprocess():
 
 
 def main() -> None:
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args.remove("--smoke")
+        # env (not a flag) so the bench_tolerance subprocess inherits it
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        print("# smoke mode: rot-check sizes, numbers are meaningless",
+              flush=True)
+
     from . import (bench_cnf, bench_combine, bench_orders, bench_physics,
                    bench_rk_sweep, bench_steps, roofline)
 
@@ -45,7 +60,7 @@ def main() -> None:
         ("bench_combine", bench_combine.main),
         ("roofline", roofline.main),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     failed = []
     for name, fn in benches:
         if only and only != name:

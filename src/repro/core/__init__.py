@@ -6,22 +6,29 @@ Public API:
 """
 from .combine import (COMBINE_BACKENDS, StageCombiner, alloc_stages,
                       get_combiner, set_stage, stage_prefix, stage_suffix)
-from .odeint import GRAD_MODES, odeint, odeint_with_stats
-from .rk import (AdaptiveConfig, rk_solve_adaptive, rk_solve_fixed, rk_stages,
+from .odeint import GRAD_MODES, TS_MODES, odeint, odeint_with_stats
+from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
+                 apply_on_failure, hermite_observe, rk_solve_adaptive,
+                 rk_solve_adaptive_saveat, rk_solve_fixed, rk_stages,
                  rk_step, tree_scale_add)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
+                         odeint_symplectic_saveat,
+                         odeint_symplectic_saveat_adaptive,
                          symplectic_step_adjoint)
 from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
 from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
-from .tableau import TABLEAUS, ButcherTableau, get_tableau
+from .tableau import HERMITE_DENSE_W, TABLEAUS, ButcherTableau, get_tableau
 
 __all__ = [
-    "odeint", "odeint_with_stats", "GRAD_MODES", "AdaptiveConfig",
+    "odeint", "odeint_with_stats", "GRAD_MODES", "TS_MODES",
+    "AdaptiveConfig", "AdaptiveSolution", "ON_FAILURE_POLICIES",
     "COMBINE_BACKENDS", "StageCombiner", "get_combiner", "alloc_stages",
     "set_stage", "stage_prefix", "stage_suffix",
-    "rk_solve_fixed", "rk_solve_adaptive", "rk_step", "rk_stages",
-    "tree_scale_add", "odeint_symplectic", "odeint_symplectic_adaptive",
+    "rk_solve_fixed", "rk_solve_adaptive", "rk_solve_adaptive_saveat",
+    "rk_step", "rk_stages", "tree_scale_add", "apply_on_failure",
+    "hermite_observe", "odeint_symplectic", "odeint_symplectic_adaptive",
+    "odeint_symplectic_saveat", "odeint_symplectic_saveat_adaptive",
     "symplectic_step_adjoint", "odeint_adjoint", "odeint_adjoint_adaptive",
     "odeint_backprop", "odeint_remat_step", "odeint_remat_solve",
-    "TABLEAUS", "ButcherTableau", "get_tableau",
+    "TABLEAUS", "ButcherTableau", "get_tableau", "HERMITE_DENSE_W",
 ]

@@ -21,7 +21,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .rk import AdaptiveConfig, VectorField, rk_solve_adaptive, rk_solve_fixed
+from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
+                 rk_solve_adaptive, rk_solve_fixed)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -82,13 +83,14 @@ def odeint_adjoint_adaptive(f: VectorField, tab: ButcherTableau,
                             combine_backend: str, x0, t0, t1, params):
     sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
                             combine_backend)
-    return sol.x_final
+    return apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
 
 
 def _adja_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0, t1, params):
     sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
                             combine_backend)
-    return sol.x_final, (sol.x_final, t0, t1, params)
+    x_final = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
+    return x_final, (x_final, t0, t1, params)
 
 
 def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
@@ -97,7 +99,10 @@ def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
     gtheta0 = jax.tree_util.tree_map(jnp.zeros_like, params)
     sol = rk_solve_adaptive(aug, tab, (xN, lam_N, gtheta0), t1, t0,
                             params, bwd_cfg, combine_backend)
-    _, lam0, gtheta = sol.x_final
+    # a truncated backward solve is a silently wrong gradient: poison it
+    # (or raise) per the backward config's policy too.
+    _, lam0, gtheta = apply_on_failure(sol.x_final, sol.succeeded,
+                                       bwd_cfg.on_failure)
     zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
     return (lam0, zt, zt, gtheta)
 

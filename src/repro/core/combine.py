@@ -45,7 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from .tableau import ButcherTableau
+from .tableau import HERMITE_DENSE_W, ButcherTableau
 
 Pytree = Any
 
@@ -364,6 +364,34 @@ class StageCombiner:
         row = (jnp.asarray(R[nz]) + h * jnp.asarray(P[nz])
                + (h * h) * jnp.asarray(Q[nz]))
         return self.combine(base, L, row, 1.0, idx=nz + i + 1)
+
+    # -- dense output (4th-order Hermite interpolation) --------------------
+
+    def interpolate(self, x0: Pytree, x1: Pytree, f0: Pytree, f1: Pytree,
+                    h, theta) -> Pytree:
+        """Cubic-Hermite dense output x(t_n + theta h) over one step.
+
+        ``x0``/``x1`` are the step endpoints, ``f0``/``f1`` their slopes,
+        ``theta`` in [0, 1] the (traced) interpolation parameter.  The
+        interpolant is evaluated as ONE row combine over the stacked buffer
+        [f0, f1, x1 - x0] with the traced coefficient row
+        ``HERMITE_DENSE_W @ [1, theta, theta^2, theta^3]`` — the same fused
+        one-HBM-pass primitive (jnp oracle or Pallas kernel) as every
+        Butcher row.  Local error O(h^4).
+        """
+        h = jnp.asarray(h)
+        theta = jnp.asarray(theta)
+        powers = jnp.stack([jnp.ones_like(theta), theta,
+                            theta * theta, theta ** 3])
+        w = jnp.asarray(HERMITE_DENSE_W) @ powers          # (3,)
+        # fold h into the slope rows so combine's h factor can stay 1:
+        # out = x0 + (h w0) f0 + (h w1) f1 + w2 (x1 - x0)
+        row = jnp.stack([h * w[0], h * w[1], w[2]])
+        D = jax.tree_util.tree_map(
+            lambda a, b, g0, g1: jnp.stack([g0.astype(a.dtype),
+                                            g1.astype(a.dtype),
+                                            b - a]), x0, x1, f0, f1)
+        return self.combine(x0, D, row, 1.0)
 
     def lambda_update(self, lam_next: Pytree, L: Pytree, h) -> Pytree:
         """lambda_n = lambda_{n+1} - h sum_i btilde_i l_{n,i}."""

@@ -39,6 +39,11 @@ VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
 # f(x, t, params) -> dx/dt, pytree-in pytree-out.
 
 
+def stack_trees(trees) -> Pytree:
+    """Stack a list of identically-shaped pytrees along a new leading axis."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+
+
 def tree_scale_add(base: Pytree, terms) -> Pytree:
     """base + sum_i coef_i * tree_i via chained per-leaf AXPYs.
 
@@ -139,6 +144,9 @@ def rk_solve_fixed(f: VectorField, tab: ButcherTableau, x0, t0, t1,
 # Adaptive stepping (PI controller), bounded buffer of accepted checkpoints.
 # ---------------------------------------------------------------------------
 
+ON_FAILURE_POLICIES = ("nan", "ignore", "raise")
+
+
 @dataclasses.dataclass(frozen=True)
 class AdaptiveConfig:
     rtol: float = 1e-6
@@ -149,6 +157,17 @@ class AdaptiveConfig:
     min_factor: float = 0.2
     max_factor: float = 10.0
     initial_step: float = 0.01
+    # what odeint does with x_final when the while-loop exits via the
+    # max_steps / max_attempts budget without reaching t1:
+    #   "nan"    — poison every inexact leaf with NaN  [default]
+    #   "ignore" — return the truncated state as-is (pre-fix behaviour)
+    #   "raise"  — jax.debug.callback that raises at dispatch time
+    on_failure: str = "nan"
+
+    def __post_init__(self):
+        if self.on_failure not in ON_FAILURE_POLICIES:
+            raise ValueError(f"on_failure {self.on_failure!r} not in "
+                             f"{ON_FAILURE_POLICIES}")
 
 
 class AdaptiveSolution(NamedTuple):
@@ -158,6 +177,9 @@ class AdaptiveSolution(NamedTuple):
     hs: jnp.ndarray      # (max_steps,)
     n_accepted: jnp.ndarray  # int32 scalar
     n_fevals: jnp.ndarray    # int32 scalar
+    succeeded: jnp.ndarray   # bool scalar: reached t1 within the budgets
+    h_final: jnp.ndarray     # UNclamped controller step at exit (see below)
+    n_attempts: jnp.ndarray  # int32 scalar: total trial steps (acc + rej)
 
 
 def _error_norm(err, x, x_next, rtol, atol):
@@ -173,15 +195,43 @@ def _error_norm(err, x, x_next, rtol, atol):
     return jnp.sqrt(total / count)
 
 
+def _time_resolution(t0, t1, dtype):
+    """Smallest meaningful |t1 - t| for the termination test.
+
+    The old fixed threshold (1e-14) is below float32 resolution for typical
+    t, so with x64 disabled the loop could burn attempts re-trying steps
+    whose ``t + h`` rounds back to ``t``.  Scale by the representable
+    resolution of the interval instead: a few ulps of max(|t0|, |t1|,
+    |t1 - t0|) in the working dtype.
+    """
+    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
+    scale = jnp.maximum(jnp.abs(t1 - t0),
+                        jnp.maximum(jnp.abs(t0), jnp.abs(t1)))
+    return 4.0 * eps * jnp.maximum(scale, eps)
+
+
 def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
                       params, cfg: AdaptiveConfig,
-                      combine_backend: str = "auto") -> AdaptiveSolution:
+                      combine_backend: str = "auto",
+                      h0=None) -> AdaptiveSolution:
+    """PI-controlled adaptive solve on [t0, t1].
+
+    ``h0`` (optional, traced ok) seeds the controller with a step MAGNITUDE
+    — e.g. the ``h_final`` of a preceding segment in a SaveAt solve — and
+    falls back to ``cfg.initial_step`` when absent or zero.  The carried
+    controller step ``h`` is never clamped: each trial uses
+    ``h_eff = min(|h|, |t1 - t|)`` but the controller update is based on the
+    unclamped ``h`` for accepted landing steps, so a tiny final step against
+    the t1 boundary cannot collapse the step size for a continuation (or
+    for a backward adjoint solve reusing the config).
+    """
     if tab.b_err is None:
         raise ValueError(f"tableau {tab.name} has no embedded error estimate")
     dtype = jnp.result_type(float)
     t0 = jnp.asarray(t0, dtype=dtype)
     t1 = jnp.asarray(t1, dtype=dtype)
     direction = jnp.sign(t1 - t0)
+    t_res = _time_resolution(t0, t1, dtype)
     err_exp = -1.0 / (tab.err_order + 1.0)
     combiner = get_combiner(tab, combine_backend)
 
@@ -192,12 +242,14 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
 
     def cond(state):
         (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        return (direction * (t1 - t) > 1e-14) \
+        return (direction * (t1 - t) > t_res) \
             & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts)
 
     def body(state):
         (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        # clamp the step so we land exactly on t1
+        # clamp the TRIAL step so we land exactly on t1; the carried h
+        # stays unclamped (see the docstring).
+        clamped = jnp.abs(h) > jnp.abs(t1 - t)
         h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
         x_next, err = rk_step(f, tab, x, t, h_eff, params, combiner,
                               with_error=True)
@@ -206,7 +258,10 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
         factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
                                                  err_exp),
                           cfg.min_factor, cfg.max_factor)
-        h_new = h_eff * factor
+        # accepted clamped landing step: keep the natural step h for any
+        # continuation.  Rejected steps must shrink from the step actually
+        # attempted (h_eff), or a clamped rejection would retry forever.
+        h_new = jnp.where(accept & clamped, h, h_eff * factor)
 
         def commit(bufs):
             xs_b, ts_b, hs_b = bufs
@@ -226,9 +281,121 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
         fevals = tab.s + (1 if tab.err_uses_fsal else 0)
         return (t, x, h_new, n_acc, n_try + 1, xs, ts, hs, fe + fevals)
 
-    h0 = direction * jnp.asarray(cfg.initial_step, dtype)
-    state0 = (t0, x0, h0, jnp.int32(0), jnp.int32(0),
+    h0_abs = jnp.abs(jnp.asarray(cfg.initial_step if h0 is None else h0,
+                                 dtype))
+    h_init = direction * jnp.where(h0_abs > 0, h0_abs,
+                                   jnp.asarray(cfg.initial_step, dtype))
+    state0 = (t0, x0, h_init, jnp.int32(0), jnp.int32(0),
               zeros_like_buf, ts_buf, hs_buf, jnp.int32(0))
     (t, x, h, n_acc, n_try, xs, ts, hs, fe) = jax.lax.while_loop(
         cond, body, state0)
-    return AdaptiveSolution(x, xs, ts, hs, n_acc, fe)
+    succeeded = jnp.logical_not(direction * (t1 - t) > t_res)
+    return AdaptiveSolution(x, xs, ts, hs, n_acc, fe, succeeded, h, n_try)
+
+
+def _raise_on_failure_cb(ok):
+    if not bool(ok):
+        raise RuntimeError(
+            "odeint: adaptive solver exhausted max_steps/max_attempts "
+            "without reaching t1 (AdaptiveConfig(on_failure='raise'))")
+
+
+def apply_on_failure(x_final: Pytree, succeeded, on_failure: str) -> Pytree:
+    """Apply an AdaptiveConfig.on_failure policy to a solver result."""
+    if on_failure == "ignore":
+        return x_final
+    if on_failure == "raise":
+        jax.debug.callback(_raise_on_failure_cb, succeeded)
+        return x_final
+    assert on_failure == "nan", on_failure
+
+    def poison(l):
+        if not jnp.issubdtype(l.dtype, jnp.inexact):
+            return l
+        return jnp.where(succeeded, l, jnp.full_like(l, jnp.nan))
+
+    return jax.tree_util.tree_map(poison, x_final)
+
+
+# ---------------------------------------------------------------------------
+# SaveAt support: segmented adaptive solves + Hermite dense output.
+# ---------------------------------------------------------------------------
+
+def rk_solve_adaptive_saveat(f: VectorField, tab: ButcherTableau, x0, t0,
+                             ts: jnp.ndarray, params, cfg: AdaptiveConfig,
+                             combine_backend: str = "auto"):
+    """Adaptive solve observed at the times ``ts`` by segmenting the solve.
+
+    One adaptive sub-solve per segment [t0, ts[0]], [ts[0], ts[1]], ...; the
+    controller state threads across segments (each segment seeds its step
+    from the previous segment's unclamped ``h_final``, so landing exactly on
+    an observation time costs one clamped step, not a collapsed restart).
+    A failed segment poisons its state per ``cfg.on_failure`` and the
+    poison propagates to every later observation.
+
+    Returns (obs, sols): ``obs`` the stacked observations (leading dim
+    len(ts)), ``sols`` the per-segment AdaptiveSolutions.
+    """
+    t_prev = jnp.asarray(t0, dtype=jnp.result_type(float))
+    x, h, obs, sols = x0, None, [], []
+    for i in range(ts.shape[0]):
+        sol = rk_solve_adaptive(f, tab, x, t_prev, ts[i], params, cfg,
+                                combine_backend, h0=h)
+        x = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
+        h = sol.h_final
+        obs.append(x)
+        sols.append(sol)
+        t_prev = ts[i]
+    return stack_trees(obs), sols
+
+
+def hermite_observe(f: VectorField, tab: ButcherTableau,
+                    sol: AdaptiveSolution, params, taus: jnp.ndarray,
+                    combine_backend: str = "auto") -> Pytree:
+    """Dense-output observation of ONE adaptive solve at the times ``taus``.
+
+    4th-order cubic-Hermite interpolation over the accepted step containing
+    each tau (StageCombiner.interpolate — the same row-combine primitive as
+    the Butcher rows).  The step endpoints come from the checkpoint buffer;
+    their slopes are recomputed (2 extra f-evals per observation), so the
+    step controller is never perturbed by observation times.  taus outside
+    the integrated span clamp to the nearest endpoint.
+    """
+    combiner = get_combiner(tab, combine_backend)
+    max_steps = sol.ts.shape[0]
+    n_acc = sol.n_accepted
+    last = jnp.maximum(n_acc - 1, 0)
+    direction = jnp.sign(jnp.where(n_acc > 0, sol.hs[0], 1.0))
+    valid = jnp.arange(max_steps) < n_acc
+    keys = jnp.where(valid, direction * sol.ts, jnp.inf)
+
+    def observe_one(tau):
+        n = jnp.clip(jnp.searchsorted(keys, direction * tau,
+                                      side="right") - 1, 0, last)
+        t_n = sol.ts[n]
+        h_n = sol.hs[n]
+        x_n = jax.tree_util.tree_map(
+            lambda b: jax.lax.dynamic_index_in_dim(b, n, 0, keepdims=False),
+            sol.xs)
+        # x_{n+1}: next checkpoint, or x_final for the last accepted step.
+        is_last = n >= n_acc - 1
+        x_n1 = jax.tree_util.tree_map(
+            lambda b, xf: jnp.where(
+                is_last, xf,
+                jax.lax.dynamic_index_in_dim(
+                    b, jnp.minimum(n + 1, max_steps - 1), 0,
+                    keepdims=False)),
+            sol.xs, sol.x_final)
+        theta = jnp.clip((tau - t_n) / jnp.where(h_n == 0, 1.0, h_n),
+                         0.0, 1.0)
+        f0 = f(x_n, t_n, params)
+        f1 = f(x_n1, t_n + h_n, params)
+        out = combiner.interpolate(x_n, x_n1, f0, f1, h_n, theta)
+        # degenerate solve (no accepted steps): the state never moved.
+        return jax.tree_util.tree_map(
+            lambda o, xf: jnp.where(n_acc > 0, o, xf), out, sol.x_final)
+
+    # observe_one is elementwise in tau: ONE traced copy serves every
+    # observation (and slope recomputations batch), instead of unrolling
+    # the search + interpolate + 2-f-eval graph per tau.
+    return jax.vmap(observe_one)(taus)

@@ -17,7 +17,34 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ButcherTableau", "get_tableau", "TABLEAUS", "register_tableau"]
+__all__ = ["ButcherTableau", "get_tableau", "TABLEAUS", "register_tableau",
+           "HERMITE_DENSE_W"]
+
+# ---------------------------------------------------------------------------
+# Dense-output (interpolation) tableau.
+#
+# The adaptive driver observes interior times via 4th-order cubic-Hermite
+# dense output over each accepted step [t_n, t_n + h_n].  With theta in
+# [0, 1] the interpolant is
+#
+#   x(t_n + theta h) = x_n + h [w0(theta) f_n + w1(theta) f_{n+1}]
+#                          + w2(theta) (x_{n+1} - x_n),
+#
+# where (w0, w1, w2) are the Hermite basis polynomials h10, h11, h01.  The
+# rows of HERMITE_DENSE_W give their monomial coefficients against
+# [1, theta, theta^2, theta^3], so the combine row for a given theta is
+# ``HERMITE_DENSE_W @ [1, theta, theta^2, theta^3]`` — evaluated traced and
+# fed to the StageCombiner row-combine primitive exactly like a Butcher row
+# (core/combine.py::StageCombiner.interpolate).  Local error is O(h^4) for
+# any tableau of order >= 3 (the interpolant only consumes the step
+# endpoints and their slopes, so it is tableau-independent).
+# ---------------------------------------------------------------------------
+
+HERMITE_DENSE_W = np.array([
+    [0.0, 1.0, -2.0, 1.0],   # w0 = h10(theta) = theta - 2 theta^2 + theta^3
+    [0.0, 0.0, -1.0, 1.0],   # w1 = h11(theta) = -theta^2 + theta^3
+    [0.0, 0.0, 3.0, -2.0],   # w2 = h01(theta) = 3 theta^2 - 2 theta^3
+], dtype=np.float64)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,7 +17,11 @@ backward pass.  The chain is purely memory-bound (arithmetic intensity
 ~ s FLOPs / (s+2) * 4 bytes < 1), so fusing it into one VMEM-tiled kernel
 turns s+2 HBM passes into exactly one read of (x, ks) and one write of out.
 The solver hot loop reaches these kernels through core/combine.py's
-StageCombiner (``combine_backend="pallas"`` / "auto" on TPU).
+StageCombiner (``combine_backend="pallas"`` / "auto" on TPU).  Coefficient
+rows may be traced values, not just tableau constants: the symplectic
+backward recursion's h-dependent Eq. (7)/(8) rows and the SaveAt dense-
+output Hermite rows (StageCombiner.interpolate, buffer [f_n, f_{n+1},
+x_{n+1}-x_n]) both flow through the same single-row kernel.
 
 Tiling: the state is reshaped to (rows, 128) lanes; each grid step processes
 a (block_rows, 128) tile of x and the matching (s, block_rows, 128) tile of

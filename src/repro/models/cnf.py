@@ -110,6 +110,38 @@ def cnf_forward(params, u, eps, cfg: CNFConfig):
     return x, dlp
 
 
+def cnf_flow_path(params, u, eps, cfg: CNFConfig, ts):
+    """Observe the flow (x(t), delta_logp(t)) along the likelihood path.
+
+    ``ts``: observation times within (0, cfg.t1]; ts[-1] should be cfg.t1
+    so each component hands its successor the fully transported state (the
+    solve ends at ts[-1]).  Returns (xs, dlps) stacked over
+    n_components * len(ts) path points: xs[k] is the state after the
+    (k // len(ts))-th component has flowed to ts[k % len(ts)], and dlps is
+    the CUMULATIVE log-density change up to that point — a single
+    multi-observation solve per component instead of len(ts) restarts.
+    """
+    field = _aug_field_hutch if cfg.trace == "hutchinson" else \
+        _aug_field_exact
+    ts = jnp.asarray(ts)
+    adaptive = AdaptiveConfig(rtol=cfg.rtol, atol=cfg.atol,
+                              max_steps=cfg.max_steps) \
+        if cfg.adaptive else None
+    x, dlp = u, jnp.zeros(u.shape[0], dtype=jnp.float32)
+    xs_path, dlp_path = [], []
+    for comp in params["components"]:
+        xo, dlpo, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
+                             t0=0.0, ts=ts, method=cfg.method,
+                             grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
+                             adaptive=adaptive,
+                             combine_backend=cfg.combine_backend)
+        xs_path.append(xo)
+        dlp_path.append(dlp[None] + dlpo)
+        x, dlp = xo[-1], dlp + dlpo[-1]
+    return (jnp.concatenate(xs_path, axis=0),
+            jnp.concatenate(dlp_path, axis=0))
+
+
 def cnf_nll(params, u, eps, cfg: CNFConfig):
     """Mean negative log-likelihood in nats."""
     z, dlp = cnf_forward(params, u, eps, cfg)

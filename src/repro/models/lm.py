@@ -244,9 +244,10 @@ def lm_forward(params, cfg: ArchConfig, tokens, *, caches=None, pos=None,
 # node mode: depth-time ODE over the repeat units (the paper's technique)
 # ---------------------------------------------------------------------------
 
-def _node_depth_solve(params, cfg: ArchConfig, x, shard):
+def _depth_field(cfg: ArchConfig, shard):
+    """f(x, t) = R * (unit_{floor(tR)}(x) - x): depth-time vector field
+    shared by the training solve and the depth-observation probe."""
     R = cfg.n_repeats
-    n_steps = cfg.node.n_steps or R
 
     def field(xs, t, unit_params):
         n = jnp.clip(jnp.floor(t * R).astype(jnp.int32), 0, R - 1)
@@ -258,7 +259,33 @@ def _node_depth_solve(params, cfg: ArchConfig, x, shard):
         # sequence-sharded like the discrete-mode carries
         return shard((y - xs) * float(R), ("batch", "seq_carry", "embed"))
 
-    return odeint(field, x, params["unit"], t0=0.0, t1=1.0,
-                  method=cfg.node.method, grad_mode=cfg.node.grad_mode,
-                  n_steps=n_steps,
+    return field
+
+
+def _node_depth_solve(params, cfg: ArchConfig, x, shard):
+    n_steps = cfg.node.n_steps or cfg.n_repeats
+    return odeint(_depth_field(cfg, shard), x, params["unit"], t0=0.0,
+                  t1=1.0, method=cfg.node.method,
+                  grad_mode=cfg.node.grad_mode, n_steps=n_steps,
+                  combine_backend=cfg.node.combine_backend)
+
+
+def node_depth_states(params, cfg: ArchConfig, x, depths, shard=no_shard):
+    """Observe the depth-time ODE at interior depths (probing/logit-lens).
+
+    ``depths``: monotone observation times in (0, 1] of the depth ODE
+    (depth d in [0, n_repeats] corresponds to t = d / n_repeats).  Returns
+    hidden states stacked (len(depths), B, S, E) from ONE multi-observation
+    solve — the whole depth trajectory costs one forward solve instead of
+    one solve per probe depth, and stays differentiable under every
+    grad_mode (the symplectic mode checkpoints each inter-depth segment).
+    """
+    n_steps = cfg.node.n_steps or cfg.n_repeats
+    depths = jnp.asarray(depths)
+    # per-segment step budget: keep the TOTAL grid comparable to the
+    # unobserved solve's n_steps over [0, 1]
+    seg_steps = max(1, -(-n_steps // depths.shape[0]))
+    return odeint(_depth_field(cfg, shard), x, params["unit"], t0=0.0,
+                  ts=depths, method=cfg.node.method,
+                  grad_mode=cfg.node.grad_mode, n_steps=seg_steps,
                   combine_backend=cfg.node.combine_backend)

@@ -94,6 +94,33 @@ def predict_next(params, u, cfg: PhysicsConfig):
                   combine_backend=cfg.combine_backend)
 
 
+def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
+    """Evolve u0 for ``horizon`` snapshot intervals in ONE solve.
+
+    Observation times dt, 2dt, ..., horizon*dt via the SaveAt path: the
+    symplectic adjoint checkpoints each inter-snapshot segment and every
+    gradient mode sees the identical discrete map as ``horizon`` chained
+    ``predict_next`` calls — without re-integrating from t=0 per snapshot.
+    Returns (horizon, B, grid).
+    """
+    ts = cfg.dt * jnp.arange(1, horizon + 1)
+    return odeint(hnn_field(cfg.system, cfg.dx), u0, params, t0=0.0,
+                  ts=ts, method=cfg.method, grad_mode=cfg.grad_mode,
+                  n_steps=cfg.n_steps,
+                  combine_backend=cfg.combine_backend)
+
+
 def physics_loss(params, u_k, u_k1, cfg: PhysicsConfig):
     pred = predict_next(params, u_k, cfg)
     return jnp.mean((pred - u_k1) ** 2)
+
+
+def rollout_loss(params, u_traj, cfg: PhysicsConfig):
+    """Multi-snapshot interpolation loss over one trajectory batch.
+
+    ``u_traj``: (K+1, B, grid) consecutive snapshots; the loss compares a
+    single K-observation solve from u_traj[0] against snapshots 1..K (the
+    multi-observation generalization of the paper's pairwise MSE).
+    """
+    pred = rollout(params, u_traj[0], cfg, u_traj.shape[0] - 1)
+    return jnp.mean((pred - u_traj[1:]) ** 2)
