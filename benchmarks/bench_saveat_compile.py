@@ -1,0 +1,121 @@
+"""Compile-time scaling of the SaveAt drivers in the observation count.
+
+The scan-segmented drivers trace ONE segment body regardless of len(ts),
+so jaxpr size and XLA compile time are flat as the observation horizon
+grows — this bench measures exactly that, plus the steady-state execution
+time, for the symplectic (value + grad) and backprop SaveAt paths.
+
+An ``unrolled`` reference re-implements the pre-scan segmentation (a
+Python loop chaining per-segment solves) at SMALL horizons only: its
+compile time grows linearly-to-superlinearly in len(ts), which is why the
+production horizon (>= 64 observations, the ``scan`` rows) is measured on
+the scanned drivers alone — the unrolled form does not fit a CI budget at
+that size, and the small-horizon rows give the extrapolation.
+
+CSV: name,compile_time_us,steady_us=...  (BENCH_*.json carries both).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import odeint
+from repro.core.rk import rk_solve_fixed
+from repro.core.tableau import get_tableau
+
+from .common import row, smoke
+
+
+def _mlp_field(x, t, params):
+    h = jnp.tanh(params["w1"] @ x + params["b1"] + t)
+    return params["w2"] @ h + params["b2"]
+
+
+def _params(dim=8, hidden=16):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    return {
+        "w1": jax.random.normal(ks[0], (hidden, dim)) * 0.5,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(ks[2], (dim, hidden)) * 0.5,
+        "b2": jnp.zeros((dim,)),
+    }
+
+
+def _unrolled_saveat(f, x0, params, ts, n_steps):
+    """The pre-scan segmentation: Python loop, one traced solve per
+    segment (kept ONLY as the compile-time baseline for this bench)."""
+    tab = get_tableau("dopri5")
+    x, t_prev, obs = x0, jnp.asarray(0.0, ts.dtype), []
+    for i in range(ts.shape[0]):
+        x = rk_solve_fixed(f, tab, x, t_prev, ts[i], n_steps,
+                           params).x_final
+        obs.append(x)
+        t_prev = ts[i]
+    return jnp.stack(obs)
+
+
+def _measure(build, *args):
+    """(compile_seconds, steady_us) of a jitted callable."""
+    jitted = jax.jit(build)
+    t0 = time.perf_counter()
+    compiled = jitted.lower(*args).compile()
+    compile_s = time.perf_counter() - t0
+    jax.block_until_ready(compiled(*args))
+    t0 = time.perf_counter()
+    iters = 3
+    for _ in range(iters):
+        out = compiled(*args)
+    jax.block_until_ready(out)
+    return compile_s, (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    n_steps = 2 if smoke() else 4
+    horizons = (2, 8) if smoke() else (4, 16, 64)
+    unrolled_horizons = (2, 4) if smoke() else (4, 8, 16)
+    params = _params()
+    x0 = jnp.ones(8)
+
+    def ts_of(n):
+        return jnp.linspace(1.0 / n, 1.0, n)
+
+    for n in horizons:
+        ts = ts_of(n)
+
+        def value(x0, params, ts=ts):
+            return odeint(_mlp_field, x0, params, ts=ts, method="dopri5",
+                          grad_mode="symplectic", n_steps=n_steps)
+
+        def loss_grad(x0, params, ts=ts):
+            def loss(x0, params):
+                return jnp.sum(value(x0, params, ts) ** 2)
+            return jax.grad(loss, argnums=(0, 1))(x0, params)
+
+        def value_bp(x0, params, ts=ts):
+            return odeint(_mlp_field, x0, params, ts=ts, method="dopri5",
+                          grad_mode="backprop", n_steps=n_steps)
+
+        for label, fn in (("scan_symplectic_value", value),
+                          ("scan_symplectic_grad", loss_grad),
+                          ("scan_backprop_value", value_bp)):
+            c_s, s_us = _measure(fn, x0, params)
+            row(f"saveat_compile/{label}/n_obs={n}", c_s * 1e6,
+                f"steady_us={s_us:.1f}", compile_s=round(c_s, 4),
+                steady_us=round(s_us, 3))
+
+    for n in unrolled_horizons:
+        ts = ts_of(n)
+
+        def value_unrolled(x0, params, ts=ts):
+            return _unrolled_saveat(_mlp_field, x0, params, ts, n_steps)
+
+        c_s, s_us = _measure(value_unrolled, x0, params)
+        row(f"saveat_compile/unrolled_value/n_obs={n}", c_s * 1e6,
+            f"steady_us={s_us:.1f}", compile_s=round(c_s, 4),
+            steady_us=round(s_us, 3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,20 @@
 """Benchmark driver: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows AND writes one
+``BENCH_<name>.json`` per bench (wall time + every recorded row with its
+steady-state / compile-time metrics) so the perf trajectory is a queryable
+artifact, not just job logs.  CI uploads ``BENCH_*.json`` from the
+``--smoke`` job on every push.
 
-  bench_tolerance  -> Fig. 1  (gradient error vs tolerance)
-  bench_steps      -> Fig. 2  (memory vs number of steps)
-  bench_orders     -> Table 1 (memory scaling orders in N, s, L)
-  bench_cnf        -> Table 2 (CNF: NLL / memory / time per grad method)
-  bench_rk_sweep   -> Table 3 (RK methods s=2,3,6,12)
-  bench_physics    -> Table 4 (KdV / Cahn-Hilliard, dopri8)
-  bench_combine    -> fused vs unfused stage combination (StageCombiner)
-  roofline         -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
+  bench_tolerance       -> Fig. 1  (gradient error vs tolerance)
+  bench_steps           -> Fig. 2  (memory vs number of steps)
+  bench_orders          -> Table 1 (memory scaling orders in N, s, L)
+  bench_cnf             -> Table 2 (CNF: NLL / memory / time per grad method)
+  bench_rk_sweep        -> Table 3 (RK methods s=2,3,6,12)
+  bench_physics         -> Table 4 (KdV / Cahn-Hilliard, dopri8)
+  bench_combine         -> fused vs unfused stage combination (StageCombiner)
+  bench_saveat_compile  -> SaveAt compile time vs observation count
+  roofline              -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
 
 Usage:
     python -m benchmarks.run [--smoke] [bench_name]
@@ -19,16 +24,21 @@ rot-check sizes (CI executes this on every push; see .github/workflows).
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import time
 import traceback
 
+from . import common
+
 
 def _tolerance_subprocess():
     # bench_tolerance enables x64 globally; isolate it in a subprocess so
-    # the f32 benches in this process are unaffected.
+    # the f32 benches in this process are unaffected.  (Its rows are
+    # recorded in the child process, so its BENCH json carries wall time
+    # only.)
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_tolerance"],
         capture_output=True, text=True, timeout=1200)
@@ -36,6 +46,20 @@ def _tolerance_subprocess():
     if out.returncode != 0:
         sys.stderr.write(out.stderr[-2000:])
         raise RuntimeError("bench_tolerance failed")
+
+
+def _dump_bench_json(name: str, wall_s: float, ok: bool) -> None:
+    payload = {
+        "bench": name,
+        "smoke": common.smoke(),
+        "ok": ok,
+        "wall_s": round(wall_s, 2),
+        "rows": common.get_records(),
+    }
+    path = f"BENCH_{name}.json"
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"# wrote {path} ({len(payload['rows'])} rows)", flush=True)
 
 
 def main() -> None:
@@ -48,7 +72,8 @@ def main() -> None:
               flush=True)
 
     from . import (bench_cnf, bench_combine, bench_orders, bench_physics,
-                   bench_rk_sweep, bench_steps, roofline)
+                   bench_rk_sweep, bench_saveat_compile, bench_steps,
+                   roofline)
 
     benches = [
         ("bench_tolerance", _tolerance_subprocess),
@@ -58,6 +83,7 @@ def main() -> None:
         ("bench_rk_sweep", bench_rk_sweep.main),
         ("bench_physics", bench_physics.main),
         ("bench_combine", bench_combine.main),
+        ("bench_saveat_compile", bench_saveat_compile.main),
         ("roofline", roofline.main),
     ]
     only = args[0] if args else None
@@ -66,13 +92,18 @@ def main() -> None:
         if only and only != name:
             continue
         print(f"# === {name} ===", flush=True)
+        common.reset_records()
         t0 = time.time()
+        ok = True
         try:
             fn()
         except Exception:  # noqa: BLE001
+            ok = False
             failed.append(name)
             traceback.print_exc()
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        wall = time.time() - t0
+        print(f"# {name} done in {wall:.1f}s", flush=True)
+        _dump_bench_json(name, wall, ok)
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

@@ -9,8 +9,8 @@ from .combine import (COMBINE_BACKENDS, StageCombiner, alloc_stages,
 from .odeint import GRAD_MODES, TS_MODES, odeint, odeint_with_stats
 from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
                  apply_on_failure, hermite_observe, rk_solve_adaptive,
-                 rk_solve_adaptive_saveat, rk_solve_fixed, rk_stages,
-                 rk_step, tree_scale_add)
+                 rk_solve_adaptive_saveat, rk_solve_adaptive_saveat_stacked,
+                 rk_solve_fixed, rk_stages, rk_step, tree_scale_add)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
                          odeint_symplectic_saveat,
                          odeint_symplectic_saveat_adaptive,
@@ -25,6 +25,7 @@ __all__ = [
     "COMBINE_BACKENDS", "StageCombiner", "get_combiner", "alloc_stages",
     "set_stage", "stage_prefix", "stage_suffix",
     "rk_solve_fixed", "rk_solve_adaptive", "rk_solve_adaptive_saveat",
+    "rk_solve_adaptive_saveat_stacked",
     "rk_step", "rk_stages", "tree_scale_add", "apply_on_failure",
     "hermite_observe", "odeint_symplectic", "odeint_symplectic_adaptive",
     "odeint_symplectic_saveat", "odeint_symplectic_saveat_adaptive",

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 rk_solve_adaptive, rk_solve_fixed)
+                 rk_solve_adaptive, rk_solve_fixed,
+                 time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -52,7 +53,8 @@ def odeint_adjoint(f: VectorField, tab: ButcherTableau, n_steps: int,
 def _adj_fwd(f, tab, n_steps, bmult, combine_backend, x0, t0, t1, params):
     sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
                          combine_backend)
-    # O(M): only the final state is retained (plus params).
+    # O(M): only the final state is retained (plus params; t0/t1 are the
+    # PRIMAL time values so the bwd can emit dtype-matched cotangents).
     return sol.x_final, (sol.x_final, t0, t1, params)
 
 
@@ -65,8 +67,8 @@ def _adj_bwd(f, tab, n_steps, bmult, combine_backend, res, lam_N):
     sol = rk_solve_fixed(aug, tab, state_N, t1, t0,
                          n_steps * bmult, params, combine_backend)
     x0_rec, lam0, gtheta = sol.x_final
-    zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
-    return (lam0, zt, zt, gtheta)
+    # zero time cotangents in the dtypes the caller actually passed
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
 odeint_adjoint.defvjp(_adj_fwd, _adj_bwd)
@@ -103,8 +105,7 @@ def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
     # (or raise) per the backward config's policy too.
     _, lam0, gtheta = apply_on_failure(sol.x_final, sol.succeeded,
                                        bwd_cfg.on_failure)
-    zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
-    return (lam0, zt, zt, gtheta)
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
 odeint_adjoint_adaptive.defvjp(_adja_fwd, _adja_bwd)

@@ -29,7 +29,9 @@ gradients of the realized adaptive map).  ``ts_mode``:
             cotangents injected at the boundaries, keeping the exact-
             gradient guarantee).  Fixed-grid solves take ``n_steps`` PER
             SEGMENT; adaptive solves thread the controller step across
-            segments and apply ``max_steps`` per segment.     [auto default]
+            segments and apply ``max_steps`` per segment.  Segments run
+            inside one lax.scan, so trace size and compile time are O(1)
+            in len(ts) (docs/adaptive.md).                    [auto default]
   dense   — one unsegmented adaptive solve + 4th-order Hermite dense-output
             interpolation at ts (StageCombiner.interpolate), so observation
             times never perturb the step controller.  Observation error is
@@ -70,8 +72,9 @@ from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
 from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
 from .combine import resolve_backend
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 hermite_observe, rk_solve_adaptive, rk_solve_adaptive_saveat,
-                 rk_solve_fixed, stack_trees)
+                 hermite_observe, rk_solve_adaptive,
+                 rk_solve_adaptive_saveat_stacked, rk_solve_fixed,
+                 segment_starts)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
                          odeint_symplectic_saveat,
                          odeint_symplectic_saveat_adaptive)
@@ -94,13 +97,19 @@ def _segmented(solve_one, x0, t0, ts):
     """Generic SaveAt segmentation: chain per-segment solves, stack the
     segment endpoints.  Observation cotangents are injected at the segment
     boundaries automatically by reverse-mode through the composition (each
-    observation feeds both the output and the next segment's input)."""
-    x, t_prev, obs = x0, t0, []
-    for i in range(ts.shape[0]):
-        x = solve_one(x, t_prev, ts[i])
-        obs.append(x)
-        t_prev = ts[i]
-    return stack_trees(obs)
+    observation feeds both the output and the next segment's input).
+
+    ONE ``lax.scan`` over the segments: every segment shares the same step
+    budget (n_steps fixed grid / max_steps adaptive), so the per-segment
+    solve is a single traced scan body and trace/jaxpr size is O(1) in the
+    number of observations (see docs/adaptive.md)."""
+    def body(x, seg):
+        a, b = seg
+        x = solve_one(x, a, b)
+        return x, x
+
+    _, obs = jax.lax.scan(body, x0, (segment_starts(t0, ts), ts))
+    return obs
 
 
 def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
@@ -147,7 +156,7 @@ def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
                 return odeint_symplectic_saveat_adaptive(
                     f, tab, adaptive, combine_backend, x0, t0, ts, params)
             if grad_mode == "backprop":
-                obs, _ = rk_solve_adaptive_saveat(
+                obs, _ = rk_solve_adaptive_saveat_stacked(
                     f, tab, x0, t0, ts, params, adaptive, combine_backend)
                 return obs
             if grad_mode == "adjoint":

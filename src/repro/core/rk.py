@@ -39,9 +39,16 @@ VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
 # f(x, t, params) -> dx/dt, pytree-in pytree-out.
 
 
-def stack_trees(trees) -> Pytree:
-    """Stack a list of identically-shaped pytrees along a new leading axis."""
-    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *trees)
+def time_zero_cotangent(t):
+    """A zero cotangent whose aval MATCHES the primal time argument.
+
+    The drivers integrate in ``jnp.result_type(float)`` internally, but a
+    custom_vjp backward pass must return cotangents in the dtype the caller
+    actually passed (e.g. a float32 ``t0`` under x64) — so each fwd stows
+    the primal time values in the residuals and the bwd zeros them out
+    here, instead of fabricating ``result_type(float)`` zeros.
+    """
+    return jnp.zeros_like(jnp.asarray(t))
 
 
 def tree_scale_add(base: Pytree, terms) -> Pytree:
@@ -221,9 +228,11 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
     falls back to ``cfg.initial_step`` when absent or zero.  The carried
     controller step ``h`` is never clamped: each trial uses
     ``h_eff = min(|h|, |t1 - t|)`` but the controller update is based on the
-    unclamped ``h`` for accepted landing steps, so a tiny final step against
-    the t1 boundary cannot collapse the step size for a continuation (or
-    for a backward adjoint solve reusing the config).
+    unclamped ``h`` for landing steps — an accepted clamped step keeps
+    ``h``, a rejected one retries from ``h * factor`` — so a tiny final
+    step against the t1 boundary cannot collapse the step size for a
+    continuation (or for a backward adjoint solve reusing the config),
+    whether the landing trial succeeds or not.
     """
     if tab.b_err is None:
         raise ValueError(f"tableau {tab.name} has no embedded error estimate")
@@ -258,10 +267,19 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
         factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
                                                  err_exp),
                           cfg.min_factor, cfg.max_factor)
-        # accepted clamped landing step: keep the natural step h for any
-        # continuation.  Rejected steps must shrink from the step actually
-        # attempted (h_eff), or a clamped rejection would retry forever.
-        h_new = jnp.where(accept & clamped, h, h_eff * factor)
+        # clamped landing steps never contaminate the carried step: an
+        # ACCEPTED one keeps the natural h, a REJECTED one shrinks from the
+        # unclamped h (not from h_eff, which is the t1 gap, not the
+        # controller's step — shrinking from it collapses the carry exactly
+        # like the accepted case fixed earlier).  Progress is still
+        # guaranteed: factor < 1 on every rejection, so h decays
+        # geometrically until the trial is no longer clamped — at the cost
+        # of up to ceil(log(|h|/gap)/log(1/factor)) re-attempts of the
+        # identical clamped trial while |h·factor^k| still exceeds the gap
+        # (bounded, and only on the rare rejected-landing path; preserving
+        # the carry for the continuation is worth it).  For unclamped
+        # trials h_eff == h, so both arms of the old update coincide there.
+        h_new = jnp.where(accept & clamped, h, h * factor)
 
         def commit(bufs):
             xs_b, ts_b, hs_b = bufs
@@ -321,9 +339,20 @@ def apply_on_failure(x_final: Pytree, succeeded, on_failure: str) -> Pytree:
 # SaveAt support: segmented adaptive solves + Hermite dense output.
 # ---------------------------------------------------------------------------
 
-def rk_solve_adaptive_saveat(f: VectorField, tab: ButcherTableau, x0, t0,
-                             ts: jnp.ndarray, params, cfg: AdaptiveConfig,
-                             combine_backend: str = "auto"):
+def segment_starts(t0, ts: jnp.ndarray) -> jnp.ndarray:
+    """Left endpoints of the observation segments: [t0, ts[0], ..., ts[-2]].
+
+    Zipped with ``ts`` these are the (start, end) pairs every scanned
+    SaveAt driver iterates over.
+    """
+    t0 = jnp.reshape(jnp.asarray(t0, ts.dtype), (1,))
+    return jnp.concatenate([t0, ts[:-1]])
+
+
+def rk_solve_adaptive_saveat_stacked(f: VectorField, tab: ButcherTableau,
+                                     x0, t0, ts: jnp.ndarray, params,
+                                     cfg: AdaptiveConfig,
+                                     combine_backend: str = "auto"):
     """Adaptive solve observed at the times ``ts`` by segmenting the solve.
 
     One adaptive sub-solve per segment [t0, ts[0]], [ts[0], ts[1]], ...; the
@@ -333,20 +362,49 @@ def rk_solve_adaptive_saveat(f: VectorField, tab: ButcherTableau, x0, t0,
     A failed segment poisons its state per ``cfg.on_failure`` and the
     poison propagates to every later observation.
 
+    The segments run inside ONE ``lax.scan`` (every segment shares the
+    ``max_steps`` buffer bound, so shapes are uniform): trace size, jaxpr
+    size, and compile time are O(1) in len(ts).
+
     Returns (obs, sols): ``obs`` the stacked observations (leading dim
-    len(ts)), ``sols`` the per-segment AdaptiveSolutions.
+    len(ts)), ``sols`` an AdaptiveSolution whose every field carries a
+    leading len(ts) segment axis.
     """
-    t_prev = jnp.asarray(t0, dtype=jnp.result_type(float))
-    x, h, obs, sols = x0, None, [], []
-    for i in range(ts.shape[0]):
-        sol = rk_solve_adaptive(f, tab, x, t_prev, ts[i], params, cfg,
+    dtype = jnp.result_type(float)
+    ts = jnp.asarray(ts, dtype)
+    t_starts = segment_starts(t0, ts)
+
+    def body(carry, seg):
+        x, h = carry
+        a, b = seg
+        sol = rk_solve_adaptive(f, tab, x, a, b, params, cfg,
                                 combine_backend, h0=h)
         x = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
-        h = sol.h_final
-        obs.append(x)
-        sols.append(sol)
-        t_prev = ts[i]
-    return stack_trees(obs), sols
+        sol = sol._replace(x_final=x)
+        return (x, sol.h_final), sol
+
+    # h0 = 0 makes the first segment fall back to cfg.initial_step.
+    _, sols = jax.lax.scan(body, (x0, jnp.zeros((), dtype)),
+                           (t_starts, ts))
+    return sols.x_final, sols
+
+
+def rk_solve_adaptive_saveat(f: VectorField, tab: ButcherTableau, x0, t0,
+                             ts: jnp.ndarray, params, cfg: AdaptiveConfig,
+                             combine_backend: str = "auto"):
+    """List-of-segments convenience wrapper around the scanned driver.
+
+    Returns (obs, sols) with ``sols`` a Python list of per-segment
+    AdaptiveSolutions (unstacked views into the scanned buffers).  Solver
+    hot paths use ``rk_solve_adaptive_saveat_stacked`` directly — the
+    unstacking here costs O(len(ts)) trace equations and is meant for
+    inspection and tests.
+    """
+    obs, stacked = rk_solve_adaptive_saveat_stacked(
+        f, tab, x0, t0, ts, params, cfg, combine_backend)
+    sols = [jax.tree_util.tree_map(lambda l: l[i], stacked)
+            for i in range(ts.shape[0])]
+    return obs, sols
 
 
 def hermite_observe(f: VectorField, tab: ButcherTableau,

@@ -44,8 +44,9 @@ import jax.numpy as jnp
 
 from .combine import StageCombiner, alloc_stages, get_combiner, set_stage
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 rk_solve_adaptive, rk_solve_adaptive_saveat, rk_solve_fixed,
-                 rk_stages, stack_trees)
+                 rk_solve_adaptive, rk_solve_adaptive_saveat_stacked,
+                 rk_solve_fixed, rk_stages, segment_starts,
+                 time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -122,12 +123,13 @@ def odeint_symplectic(f: VectorField, tab: ButcherTableau, n_steps: int,
 def _sym_fwd(f, tab, n_steps, combine_backend, x0, t0, t1, params):
     sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
                          combine_backend)
-    # Residuals = Algorithm 1's checkpoints only.
-    return sol.x_final, (sol.xs, sol.ts, sol.h, params)
+    # Residuals = Algorithm 1's checkpoints (plus the primal times, kept
+    # only so the backward pass can emit dtype-matched zero cotangents).
+    return sol.x_final, (sol.xs, sol.ts, sol.h, params, t0, t1)
 
 
 def _sym_bwd(f, tab, n_steps, combine_backend, res, lam_N):
-    xs, ts, h, params = res
+    xs, ts, h, params, t0, t1 = res
     combiner = get_combiner(tab, combine_backend)
 
     def body(carry, inputs):
@@ -137,10 +139,9 @@ def _sym_bwd(f, tab, n_steps, combine_backend, res, lam_N):
                                              lam, combiner)
         return (lam, _tree_add(gtheta, gstep)), None
 
-    rev = jax.tree_util.tree_map(lambda l: jnp.flip(l, axis=0), (xs, ts))
-    (lam0, gtheta), _ = jax.lax.scan(body, (lam_N, _tree_zeros(params)), rev)
-    zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
-    return (lam0, zt, zt, gtheta)
+    (lam0, gtheta), _ = jax.lax.scan(body, (lam_N, _tree_zeros(params)),
+                                     (xs, ts), reverse=True)
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
 odeint_symplectic.defvjp(_sym_fwd, _sym_bwd)
@@ -162,13 +163,13 @@ def odeint_symplectic_adaptive(f: VectorField, tab: ButcherTableau,
 def _syma_fwd(f, tab, cfg, combine_backend, x0, t0, t1, params):
     sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
                             combine_backend)
-    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params)
+    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0, t1)
     x_final = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
     return x_final, res
 
 
 def _syma_bwd(f, tab, cfg, combine_backend, res, lam_N):
-    xs, ts, hs, n_acc, params = res
+    xs, ts, hs, n_acc, params, t0, t1 = res
     combiner = get_combiner(tab, combine_backend)
 
     def body(carry, inputs):
@@ -187,12 +188,11 @@ def _syma_bwd(f, tab, cfg, combine_backend, res, lam_N):
         lam, gtheta = jax.lax.cond(valid, live, dead, None)
         return (lam, gtheta), None
 
-    idxs = jnp.arange(cfg.max_steps - 1, -1, -1)
-    rev = jax.tree_util.tree_map(lambda l: jnp.flip(l, axis=0), (xs, ts, hs))
+    idxs = jnp.arange(cfg.max_steps)
     (lam0, gtheta), _ = jax.lax.scan(
-        body, (lam_N, _tree_zeros(params)), rev + (idxs,))
-    zt = jnp.zeros_like(jnp.asarray(0.0, dtype=jnp.result_type(float)))
-    return (lam0, zt, zt, gtheta)
+        body, (lam_N, _tree_zeros(params)), (xs, ts, hs, idxs),
+        reverse=True)
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
 odeint_symplectic_adaptive.defvjp(_syma_fwd, _syma_bwd)
@@ -208,28 +208,28 @@ odeint_symplectic_adaptive.defvjp(_syma_fwd, _syma_bwd)
 # of observation i is injected into lambda at its segment boundary before
 # that segment's scan runs.  Theorem 2 then applies per segment, so the
 # full gradient of any loss over the observations is exact to rounding.
+#
+# Both directions are lax.scans OVER THE SEGMENTS (segments share n_steps /
+# max_steps, so shapes are uniform): the forward stacks per-segment
+# checkpoint buffers as scan outputs, the backward is a reverse scan whose
+# body injects the i-th observation cotangent (an indexed read from the
+# stacked obs_bar via the scan's own slicing) and then runs the per-segment
+# Algorithm 2 scan.  Trace size, jaxpr size, and compile time are O(1) in
+# the number of observations — see docs/adaptive.md.
 # ---------------------------------------------------------------------------
-
-def _row(tree, i):
-    return jax.tree_util.tree_map(lambda l: l[i], tree)
-
 
 def _sym_saveat_solve(f, tab, n_steps, combine_backend, x0, t0, ts, params):
     """Forward segmented fixed-grid solve; returns (obs, residuals)."""
-    x, t_prev = x0, t0
-    obs, seg_xs, seg_ts, seg_hs = [], [], [], []
-    for i in range(ts.shape[0]):
-        sol = rk_solve_fixed(f, tab, x, t_prev, ts[i], n_steps, params,
+
+    def body(x, seg):
+        a, b = seg
+        sol = rk_solve_fixed(f, tab, x, a, b, n_steps, params,
                              combine_backend)
-        x = sol.x_final
-        obs.append(x)
-        seg_xs.append(sol.xs)
-        seg_ts.append(sol.ts)
-        seg_hs.append(sol.h)
-        t_prev = ts[i]
-    res = (stack_trees(seg_xs), jnp.stack(seg_ts), jnp.stack(seg_hs),
-           params)
-    return stack_trees(obs), res
+        return sol.x_final, (sol.x_final, sol.xs, sol.ts, sol.h)
+
+    _, (obs, seg_xs, seg_ts, seg_hs) = jax.lax.scan(
+        body, x0, (segment_starts(t0, ts), ts))
+    return obs, (seg_xs, seg_ts, seg_hs, params, t0, ts)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
@@ -252,41 +252,40 @@ def _sym_saveat_fwd(f, tab, n_steps, combine_backend, x0, t0, ts, params):
 
 
 def _sym_saveat_bwd(f, tab, n_steps, combine_backend, res, obs_bar):
-    xs_all, ts_all, hs_all, params = res
+    xs_all, ts_all, hs_all, params, t0, ts = res
     combiner = get_combiner(tab, combine_backend)
-    n_obs = ts_all.shape[0]
-    lam = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[0]), obs_bar)
-    gtheta = _tree_zeros(params)
-    for i in reversed(range(n_obs)):
-        # inject the cotangent arriving at this segment boundary
-        lam = _tree_add(lam, _row(obs_bar, i))
-        h_i = hs_all[i]
+    lam0 = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[0]), obs_bar)
 
-        def body(carry, inputs, h_seg=h_i):
-            lam_c, g_c = carry
+    def seg_body(carry, seg):
+        lam, gtheta = carry
+        ob_i, seg_xs, seg_ts, h_seg = seg
+        # inject the cotangent arriving at this segment boundary
+        lam = _tree_add(lam, ob_i)
+
+        def body(carry_c, inputs):
+            lam_c, g_c = carry_c
             x_n, t_n = inputs
             lam_c, gstep = symplectic_step_adjoint(
                 f, tab, x_n, t_n, h_seg, params, lam_c, combiner)
             return (lam_c, _tree_add(g_c, gstep)), None
 
-        rev = jax.tree_util.tree_map(
-            lambda l: jnp.flip(l[i], axis=0), (xs_all, ts_all))
-        (lam, gtheta), _ = jax.lax.scan(body, (lam, gtheta), rev)
-    zt = jnp.zeros((), ts_all.dtype)
-    return (lam, zt, jnp.zeros((n_obs,), ts_all.dtype), gtheta)
+        (lam, gtheta), _ = jax.lax.scan(body, (lam, gtheta),
+                                        (seg_xs, seg_ts), reverse=True)
+        return (lam, gtheta), None
+
+    (lam, gtheta), _ = jax.lax.scan(
+        seg_body, (lam0, _tree_zeros(params)),
+        (obs_bar, xs_all, ts_all, hs_all), reverse=True)
+    return (lam, _time_zero(t0), _time_zero(ts), gtheta)
 
 
 odeint_symplectic_saveat.defvjp(_sym_saveat_fwd, _sym_saveat_bwd)
 
 
 def _syma_saveat_solve(f, tab, cfg, combine_backend, x0, t0, ts, params):
-    obs, sols = rk_solve_adaptive_saveat(f, tab, x0, t0, ts, params, cfg,
-                                         combine_backend)
-    res = (stack_trees([s.xs for s in sols]),
-           jnp.stack([s.ts for s in sols]),
-           jnp.stack([s.hs for s in sols]),
-           jnp.stack([s.n_accepted for s in sols]),
-           params)
+    obs, sols = rk_solve_adaptive_saveat_stacked(
+        f, tab, x0, t0, ts, params, cfg, combine_backend)
+    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0, ts)
     return obs, res
 
 
@@ -313,18 +312,18 @@ def _syma_saveat_fwd(f, tab, cfg, combine_backend, x0, t0, ts, params):
 
 
 def _syma_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
-    xs_all, ts_all, hs_all, n_accs, params = res
+    xs_all, ts_all, hs_all, n_accs, params, t0, ts = res
     combiner = get_combiner(tab, combine_backend)
-    n_obs = ts_all.shape[0]
-    lam = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[0]), obs_bar)
-    gtheta = _tree_zeros(params)
-    idxs = jnp.arange(cfg.max_steps - 1, -1, -1)
-    for i in reversed(range(n_obs)):
-        lam = _tree_add(lam, _row(obs_bar, i))
-        n_acc_i = n_accs[i]
+    lam0 = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[0]), obs_bar)
+    idxs = jnp.arange(cfg.max_steps)
 
-        def body(carry, inputs, n_acc=n_acc_i):
-            lam_c, g_c = carry
+    def seg_body(carry, seg):
+        lam, gtheta = carry
+        ob_i, seg_xs, seg_ts, seg_hs, n_acc = seg
+        lam = _tree_add(lam, ob_i)
+
+        def body(carry_c, inputs):
+            lam_c, g_c = carry_c
             x_n, t_n, h_n, idx = inputs
             valid = idx < n_acc
 
@@ -339,11 +338,15 @@ def _syma_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
             out = jax.lax.cond(valid, live, dead, None)
             return out, None
 
-        rev = jax.tree_util.tree_map(
-            lambda l: jnp.flip(l[i], axis=0), (xs_all, ts_all, hs_all))
-        (lam, gtheta), _ = jax.lax.scan(body, (lam, gtheta), rev + (idxs,))
-    zt = jnp.zeros((), ts_all.dtype)
-    return (lam, zt, jnp.zeros((n_obs,), ts_all.dtype), gtheta)
+        (lam, gtheta), _ = jax.lax.scan(
+            body, (lam, gtheta), (seg_xs, seg_ts, seg_hs, idxs),
+            reverse=True)
+        return (lam, gtheta), None
+
+    (lam, gtheta), _ = jax.lax.scan(
+        seg_body, (lam0, _tree_zeros(params)),
+        (obs_bar, xs_all, ts_all, hs_all, n_accs), reverse=True)
+    return (lam, _time_zero(t0), _time_zero(ts), gtheta)
 
 
 odeint_symplectic_saveat_adaptive.defvjp(_syma_saveat_fwd, _syma_saveat_bwd)

@@ -40,6 +40,9 @@ class CNFConfig:
 
 
 def init_cnf(key, cfg: CNFConfig, dtype=jnp.float32):
+    """Component params are STACKED: every leaf carries a leading
+    ``n_components`` axis, so the component loops in ``cnf_forward`` /
+    ``cnf_flow_path`` are single ``lax.scan``s (trace size O(1) in M)."""
     def init_net(k):
         dims = (cfg.dim,) + cfg.hidden + (cfg.dim,)
         layers = []
@@ -54,8 +57,8 @@ def init_cnf(key, cfg: CNFConfig, dtype=jnp.float32):
             k = kk[0]
         return layers
 
-    keys = split_keys(key, cfg.n_components)
-    return {"components": [init_net(k) for k in keys]}
+    keys = jax.random.split(key, cfg.n_components)
+    return {"components": jax.vmap(init_net)(keys)}
 
 
 def _dynamics(net, x, t):
@@ -96,17 +99,24 @@ def cnf_forward(params, u, eps, cfg: CNFConfig):
     Returns (z, delta_logp) with log p(u) = log N(z) - delta_logp."""
     field = _aug_field_hutch if cfg.trace == "hutchinson" else \
         _aug_field_exact
-    x, dlp = u, jnp.zeros(u.shape[0], dtype=jnp.float32)
+    # dlp rides in the solve state: it must share u's dtype, or a mixed
+    # f64/f32 state corrupts the adaptive error norm and the exact-gradient
+    # checks under x64.
+    dlp0 = jnp.zeros(u.shape[0], dtype=u.dtype)
     adaptive = AdaptiveConfig(rtol=cfg.rtol, atol=cfg.atol,
                               max_steps=cfg.max_steps) \
         if cfg.adaptive else None
-    for comp in params["components"]:
+
+    def body(carry, comp):
+        x, dlp = carry
         x, dlp_i, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
                              t0=0.0, t1=cfg.t1, method=cfg.method,
                              grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
                              adaptive=adaptive,
                              combine_backend=cfg.combine_backend)
-        dlp = dlp + dlp_i
+        return (x, dlp + dlp_i), None
+
+    (x, dlp), _ = jax.lax.scan(body, (u, dlp0), params["components"])
     return x, dlp
 
 
@@ -120,6 +130,12 @@ def cnf_flow_path(params, u, eps, cfg: CNFConfig, ts):
     (k // len(ts))-th component has flowed to ts[k % len(ts)], and dlps is
     the CUMULATIVE log-density change up to that point — a single
     multi-observation solve per component instead of len(ts) restarts.
+
+    The component loop is ONE ``lax.scan`` over the stacked component
+    params, and each per-component solve is itself a scan over the
+    observation segments — so trace size is O(1) in BOTH n_components and
+    len(ts), unlocking deep stacks and long likelihood paths at constant
+    compile time.
     """
     field = _aug_field_hutch if cfg.trace == "hutchinson" else \
         _aug_field_exact
@@ -127,19 +143,22 @@ def cnf_flow_path(params, u, eps, cfg: CNFConfig, ts):
     adaptive = AdaptiveConfig(rtol=cfg.rtol, atol=cfg.atol,
                               max_steps=cfg.max_steps) \
         if cfg.adaptive else None
-    x, dlp = u, jnp.zeros(u.shape[0], dtype=jnp.float32)
-    xs_path, dlp_path = [], []
-    for comp in params["components"]:
+    dlp0 = jnp.zeros(u.shape[0], dtype=u.dtype)   # dtype: see cnf_forward
+
+    def body(carry, comp):
+        x, dlp = carry
         xo, dlpo, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
                              t0=0.0, ts=ts, method=cfg.method,
                              grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
                              adaptive=adaptive,
                              combine_backend=cfg.combine_backend)
-        xs_path.append(xo)
-        dlp_path.append(dlp[None] + dlpo)
-        x, dlp = xo[-1], dlp + dlpo[-1]
-    return (jnp.concatenate(xs_path, axis=0),
-            jnp.concatenate(dlp_path, axis=0))
+        return (xo[-1], dlp + dlpo[-1]), (xo, dlp[None] + dlpo)
+
+    _, (xs_path, dlp_path) = jax.lax.scan(body, (u, dlp0),
+                                          params["components"])
+    # (M, len(ts), ...) -> (M * len(ts), ...), matching the old concatenate
+    return (xs_path.reshape((-1,) + xs_path.shape[2:]),
+            dlp_path.reshape((-1,) + dlp_path.shape[2:]))
 
 
 def cnf_nll(params, u, eps, cfg: CNFConfig):

@@ -279,6 +279,9 @@ def node_depth_states(params, cfg: ArchConfig, x, depths, shard=no_shard):
     solve — the whole depth trajectory costs one forward solve instead of
     one solve per probe depth, and stays differentiable under every
     grad_mode (the symplectic mode checkpoints each inter-depth segment).
+    The scanned SaveAt drivers keep trace size and compile time O(1) in
+    len(depths), so dense depth sweeps (a probe at every layer of a deep
+    stack) compile as fast as a single observation.
     """
     n_steps = cfg.node.n_steps or cfg.n_repeats
     depths = jnp.asarray(depths)

@@ -101,6 +101,10 @@ def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
     symplectic adjoint checkpoints each inter-snapshot segment and every
     gradient mode sees the identical discrete map as ``horizon`` chained
     ``predict_next`` calls — without re-integrating from t=0 per snapshot.
+    The SaveAt drivers scan over the snapshot segments, so trace size and
+    compile time are O(1) in ``horizon`` — long production rollouts
+    (hundreds of snapshots) compile as fast as short ones
+    (tests/test_trace_size.py pins this for the 64-snapshot case).
     Returns (horizon, B, grid).
     """
     ts = cfg.dt * jnp.arange(1, horizon + 1)

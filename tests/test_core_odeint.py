@@ -133,6 +133,7 @@ def test_symplectic_gradient_pytree_state():
                                    rtol=1e-10, atol=1e-12)
 
 
+@pytest.mark.slow   # unrolled multi-N convergence study
 def test_adjoint_gradient_inexact_but_converging():
     """Continuous adjoint error is nonzero at coarse N and shrinks with N —
     the motivation for the paper (Sec. 3)."""
@@ -145,13 +146,13 @@ def test_adjoint_gradient_inexact_but_converging():
         return jnp.sum(y ** 2)
 
     errs = []
-    for n in (4, 8, 16):
+    for n in (4, 16):   # 4x refinement is enough to see the O(h^p) decay
         g_ref = jax.grad(loss)(x0, params, "backprop", n)
         g_adj = jax.grad(loss)(x0, params, "adjoint", n)
         errs.append(float(jnp.linalg.norm(g_ref - g_adj)
                           / jnp.linalg.norm(g_ref)))
     assert errs[0] > 1e-9          # visibly inexact at coarse resolution
-    assert errs[2] < errs[0] / 4   # converging with N
+    assert errs[1] < errs[0] / 4   # converging with N
     # symplectic is exact at the SAME coarse N:
     g_sym = jax.grad(loss)(x0, params, "symplectic", 4)
     g_ref = jax.grad(loss)(x0, params, "backprop", 4)
@@ -181,6 +182,7 @@ def test_adaptive_solution_accuracy(method, rtol):
     assert int(stats["n_steps"]) > 0
 
 
+@pytest.mark.slow   # unrolled replay reference
 def test_adaptive_symplectic_gradient_exact():
     """Adaptive forward + symplectic backward reproduces the exact gradient
     of the realized discrete map.  Reference: replay the recorded accepted

@@ -81,6 +81,7 @@ def test_moe_capacity_drops_are_bounded():
     assert float(aux) > 0
 
 
+@pytest.mark.slow   # each drawn shape recompiles the dispatch
 @settings(max_examples=10, deadline=None)
 @given(S=st.sampled_from([8, 16, 64]), E=st.sampled_from([2, 4, 8]),
        k=st.integers(1, 2))

@@ -135,6 +135,7 @@ def test_elastic_reshard_cpu():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow   # two full driver runs with checkpoint IO
 def test_train_driver_crash_resume(tmp_path):
     """End-to-end fault tolerance: run the driver with an injected failure
     and a checkpoint dir; it must complete and produce checkpoints."""

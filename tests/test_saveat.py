@@ -126,6 +126,7 @@ def test_saveat_symplectic_gradient_exact_fixed(method):
                                    rtol=1e-10, atol=1e-12)
 
 
+@pytest.mark.slow   # unrolled replay reference over every accepted step
 @pytest.mark.parametrize("method", ["dopri5", "bosh3"])
 def test_saveat_symplectic_gradient_exact_adaptive(method):
     """Adaptive SaveAt: the symplectic backward pass reproduces the exact
@@ -347,6 +348,80 @@ def test_controller_h_threads_across_segments():
         [int(s.n_accepted) for s in sols]
 
 
+def test_controller_rejected_landing_clamp_keeps_h():
+    """A REJECTED t1-clamped landing step must retry from the unclamped h,
+    mirroring the accepted-step fix: shrinking from h_eff (the t1 gap)
+    collapses the carried step to gap scale."""
+    tab = get_tableau("dopri5")
+    stiff = {"lam": jnp.asarray(-1e4)}
+    # one attempt: the trial is clamped from 1.0 to the 1e-3 gap and
+    # rejected (lam * h_eff = 10 >> 1), so h_final IS the retry step.
+    cfg = AdaptiveConfig(rtol=1e-6, atol=1e-9, max_steps=8, max_attempts=1,
+                         initial_step=1.0)
+    sol = rk_solve_adaptive(linear, tab, jnp.ones(2), 0.0, 1e-3, stiff, cfg)
+    assert not bool(sol.succeeded)
+    assert int(sol.n_accepted) == 0            # the landing trial rejected
+    # retry from the unclamped h: 1.0 * min_factor = 0.2.  The old update
+    # retried from the clamped gap: 1e-3 * 0.2 = 2e-4.
+    assert abs(float(sol.h_final)) > 0.1, float(sol.h_final)
+
+
+def test_stiff_landing_interval_converges():
+    """End-to-end stiff landing segment: geometric decay from the unclamped
+    h still reaches the stable step and the solve lands accurately within
+    the attempt budget (regression for the retry-base change)."""
+    tab = get_tableau("dopri5")
+    stiff = {"lam": jnp.asarray(-1e4)}
+    cfg = AdaptiveConfig(rtol=1e-6, atol=1e-9, max_steps=256,
+                         initial_step=1.0)
+    sol = rk_solve_adaptive(linear, tab, jnp.ones(2), 0.0, 1e-3, stiff, cfg)
+    assert bool(sol.succeeded)
+    assert int(sol.n_attempts) < 120, int(sol.n_attempts)
+    np.testing.assert_allclose(np.asarray(sol.x_final),
+                               np.exp(-10.0) * np.ones(2), rtol=1e-4)
+
+
+def test_direct_driver_time_cotangent_dtypes():
+    """Drivers called directly (bypassing odeint's time coercion) must
+    return time cotangents in the dtype the caller passed — here float32
+    times under x64."""
+    from repro.core import (odeint_adjoint, odeint_symplectic,
+                            odeint_symplectic_adaptive,
+                            odeint_symplectic_saveat,
+                            odeint_symplectic_saveat_adaptive)
+    tab = get_tableau("dopri5")
+    x0 = jnp.ones(3)
+    t0, t1 = jnp.float32(0.0), jnp.float32(1.0)
+    ts32 = jnp.array([0.5, 1.0], dtype=jnp.float32)
+    cfg = AdaptiveConfig(max_steps=32, initial_step=0.1)
+
+    cases = {
+        "sym": (lambda a, b: jnp.sum(
+            odeint_symplectic(linear, tab, 6, "auto", x0, a, b, LIN_P)),
+            (t0, t1)),
+        "syma": (lambda a, b: jnp.sum(
+            odeint_symplectic_adaptive(linear, tab, cfg, "auto",
+                                       x0, a, b, LIN_P)), (t0, t1)),
+        "adj": (lambda a, b: jnp.sum(
+            odeint_adjoint(linear, tab, 6, 1, "auto", x0, a, b, LIN_P)),
+            (t0, t1)),
+        "sym_saveat": (lambda a, b: jnp.sum(
+            odeint_symplectic_saveat(linear, tab, 4, "auto", x0, a, b,
+                                     LIN_P)), (t0, ts32)),
+        "syma_saveat": (lambda a, b: jnp.sum(
+            odeint_symplectic_saveat_adaptive(linear, tab, cfg, "auto",
+                                              x0, a, b, LIN_P)),
+            (t0, ts32)),
+    }
+    for name, (loss, targs) in cases.items():
+        gts = jax.grad(loss, argnums=(0, 1))(*targs)
+        for g, t in zip(gts, targs):
+            assert g.dtype == t.dtype, (name, g.dtype, t.dtype)
+            assert g.shape == t.shape, (name, g.shape, t.shape)
+            np.testing.assert_array_equal(np.asarray(g),
+                                          np.zeros(t.shape, t.dtype))
+
+
 def test_time_resolution_dtype_aware():
     t32 = _time_resolution(jnp.float32(0.0), jnp.float32(1000.0),
                            jnp.float32)
@@ -355,6 +430,7 @@ def test_time_resolution_dtype_aware():
     assert float(t64) < 1e-14   # far tighter than the old fixed threshold
 
 
+@pytest.mark.slow   # subprocess with its own jax init/compile
 def test_float32_termination_no_attempt_burn():
     """With x64 disabled the eps-scaled threshold terminates cleanly on
     typical and offset intervals (the old 1e-14 is below f32 resolution)."""

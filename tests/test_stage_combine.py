@@ -114,7 +114,8 @@ def test_symplectic_matches_jax_grad_fixed_grid(method):
 
 @pytest.mark.parametrize("method,rtol", [
     ("heun12", 1e-3), ("bosh3", 1e-5), ("dopri5", 1e-6),
-    ("fehlberg45", 1e-7), ("dopri8", 1e-7)])
+    pytest.param("fehlberg45", 1e-7, marks=pytest.mark.slow),
+    pytest.param("dopri8", 1e-7, marks=pytest.mark.slow)])
 def test_symplectic_matches_jax_grad_adaptive_grid(method, rtol):
     """Adaptive forward + symplectic backward == jax.grad of the REALIZED
     discrete map, for every tableau with an embedded error estimate.  The
@@ -154,6 +155,7 @@ def test_symplectic_matches_jax_grad_adaptive_grid(method, rtol):
                                    rtol=1e-9, atol=1e-11)
 
 
+@pytest.mark.slow
 def test_symplectic_pallas_backend_gradient_f32():
     """The Pallas-kernel combine path (f32 accumulate) stays within f32
     tolerance of the f64 jnp path on both forward and gradient."""
@@ -193,6 +195,7 @@ def test_backprop_differentiates_through_pallas_kernel():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_grad_through_pallas_multirow_error_path():
     """rk_step with an embedded error estimate routes through the multi-row
     kernel (solution_and_error); it must stay reverse-differentiable under

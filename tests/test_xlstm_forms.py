@@ -3,6 +3,7 @@ carry states) — the §Perf Cell-A machinery must be exact, not approximate."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.nn.xlstm import (XLSTMConfig, init_mlstm, init_mlstm_state,
                             mlstm_forward)
@@ -24,6 +25,7 @@ def test_chunkwise_matches_parallel_values():
                                rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_chunkwise_matches_parallel_grads():
     cfgP, cfgC, p, x = _setup()
 
@@ -38,6 +40,7 @@ def test_chunkwise_matches_parallel_grads():
                                    rtol=5e-3, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_chunkwise_carry_matches_recurrent_decode():
     """The chunkwise final carry equals rolling the O(1) decode recurrence
     token by token — so prefill->decode handoff is consistent."""
@@ -53,6 +56,7 @@ def test_chunkwise_carry_matches_recurrent_decode():
                                    rtol=5e-3, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_auto_form_switches_on_length():
     cfg = XLSTMConfig(d_model=32, n_heads=4, m_form="auto", m_chunk=16,
                       m_chunkwise_min_s=64)
