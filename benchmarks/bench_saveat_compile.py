@@ -21,7 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import odeint
+from repro.core import DirectBackprop, SaveAt, SymplecticAdjoint, solve
 from repro.core.rk import rk_solve_fixed
 from repro.core.tableau import get_tableau
 
@@ -85,8 +85,9 @@ def main() -> None:
         ts = ts_of(n)
 
         def value(x0, params, ts=ts):
-            return odeint(_mlp_field, x0, params, ts=ts, method="dopri5",
-                          grad_mode="symplectic", n_steps=n_steps)
+            return solve(_mlp_field, x0, params, saveat=SaveAt(ts=ts),
+                         method="dopri5", gradient=SymplecticAdjoint(),
+                         stepping=n_steps).ys
 
         def loss_grad(x0, params, ts=ts):
             def loss(x0, params):
@@ -94,8 +95,9 @@ def main() -> None:
             return jax.grad(loss, argnums=(0, 1))(x0, params)
 
         def value_bp(x0, params, ts=ts):
-            return odeint(_mlp_field, x0, params, ts=ts, method="dopri5",
-                          grad_mode="backprop", n_steps=n_steps)
+            return solve(_mlp_field, x0, params, saveat=SaveAt(ts=ts),
+                         method="dopri5", gradient=DirectBackprop(),
+                         stepping=n_steps).ys
 
         for label, fn in (("scan_symplectic_value", value),
                           ("scan_symplectic_grad", loss_grad),

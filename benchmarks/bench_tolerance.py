@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AdaptiveConfig, odeint
+from repro.core import (AdaptiveConfig, ContinuousAdjoint, SymplecticAdjoint,
+                        solve)
 from .common import row, smoke
 
 jax.config.update("jax_enable_x64", True)
@@ -34,16 +35,15 @@ def _setup(dim=8, hidden=32):
 def run(atols=(1e-8, 1e-6, 1e-5, 1e-4, 1e-3)):
     p, x0 = _setup()
 
-    def loss(params, mode, cfg):
-        y = odeint(lambda x, t, pp: _field(x, t, pp), x0, params,
-                   method="dopri5", grad_mode=mode, adaptive=cfg,
-                   adjoint_adaptive_cfg=cfg)
-        return jnp.sum(jnp.tanh(y) ** 2)
+    def loss(params, gradient, cfg):
+        sol = solve(lambda x, t, pp: _field(x, t, pp), x0, params,
+                    method="dopri5", gradient=gradient, stepping=cfg)
+        return jnp.sum(jnp.tanh(sol.ys) ** 2)
 
     # tight-tolerance oracle (forward-drift context only)
     tight = AdaptiveConfig(rtol=1e-10, atol=1e-12, max_steps=512,
                            initial_step=0.01)
-    g_tight = jax.grad(loss)(p, "symplectic", tight)
+    g_tight = jax.grad(loss)(p, SymplecticAdjoint(), tight)
 
     def rel(a, b):
         num = jnp.sqrt(sum(jnp.sum((x - y) ** 2) for x, y in zip(
@@ -61,8 +61,8 @@ def run(atols=(1e-8, 1e-6, 1e-5, 1e-4, 1e-3)):
     for atol in atols:
         cfg = AdaptiveConfig(rtol=1e2 * atol, atol=atol, max_steps=512,
                              initial_step=0.01)
-        g_sym = jax.grad(loss)(p, "symplectic", cfg)
-        g_adj = jax.grad(loss)(p, "adjoint", cfg)
+        g_sym = jax.grad(loss)(p, SymplecticAdjoint(), cfg)
+        g_adj = jax.grad(loss)(p, ContinuousAdjoint(bwd_adaptive=cfg), cfg)
         bwd_err = rel(g_adj, g_sym)      # adjoint's own backward error
         fwd_drift = rel(g_sym, g_tight)  # discretization of the forward
         out[atol] = (bwd_err, fwd_drift)

@@ -4,8 +4,11 @@ Trains FFJORD-style CNFs with the adaptive dopri5 solver and the symplectic
 adjoint — the paper's exact experimental recipe at laptop scale.
 
     PYTHONPATH=src python examples/cnf_tabular.py --dataset gas --steps 200
+
+``REPRO_BENCH_SMOKE=1`` shrinks everything to CI-smoke sizes (seconds).
 """
 import argparse
+import os
 import time
 
 import jax
@@ -25,6 +28,9 @@ def main():
                     help="dopri5 adaptive stepping (the paper's setting)")
     ap.add_argument("--lr", type=float, default=1e-3)
     args = ap.parse_args()
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        args.steps = min(args.steps, 4)
+        args.batch = min(args.batch, 32)
 
     cfg = CNFConfig(dim=PAPER_DIMS[args.dataset], hidden=(64, 64),
                     n_components=PAPER_M[args.dataset],

@@ -11,8 +11,11 @@ crash-resume run through the production runtime.
     PYTHONPATH=src python examples/lm_node_train.py --preset full --steps 300
     # CI-sized run:
     PYTHONPATH=src python examples/lm_node_train.py --preset ci
+
+``REPRO_BENCH_SMOKE=1`` forces the ci preset at a handful of steps.
 """
 import argparse
+import os
 import time
 
 import jax
@@ -42,6 +45,9 @@ def main():
     ap.add_argument("--node-method", default="euler")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        args.preset = "ci"
+        args.steps = min(args.steps, 3)
     ps = PRESETS[args.preset]
 
     arch = ArchConfig(

@@ -4,8 +4,11 @@ Eighth-order Dormand-Prince (13 stages) + symplectic adjoint: the setting
 where per-stage checkpointing matters most.
 
     PYTHONPATH=src python examples/physics_kdv.py --system kdv --steps 150
+
+``REPRO_BENCH_SMOKE=1`` shrinks everything to CI-smoke sizes (seconds).
 """
 import argparse
+import os
 import time
 
 import jax
@@ -25,12 +28,19 @@ def main():
     ap.add_argument("--method", default="dopri8")
     ap.add_argument("--lr", type=float, default=3e-3)
     args = ap.parse_args()
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke:
+        args.steps = min(args.steps, 3)
+        args.method = "dopri5"   # 7 stages, not dopri8's 13
 
-    cfg = PhysicsConfig(grid=64, system=args.system, method=args.method,
-                        grad_mode=args.grad_mode, n_steps=4)
+    cfg = PhysicsConfig(grid=32 if smoke else 64, system=args.system,
+                        method=args.method, grad_mode=args.grad_mode,
+                        n_steps=2 if smoke else 4)
     print(f"generating {args.system} trajectories...")
-    trajs = generate_trajectories(args.system, n_traj=6, grid=cfg.grid,
-                                  n_snapshots=16, substeps=80)
+    trajs = generate_trajectories(args.system, n_traj=2 if smoke else 6,
+                                  grid=cfg.grid,
+                                  n_snapshots=9 if smoke else 16,
+                                  substeps=20 if smoke else 80)
     u_k = jnp.asarray(trajs[:-1, :-1].reshape(-1, cfg.grid))
     u_k1 = jnp.asarray(trajs[:-1, 1:].reshape(-1, cfg.grid))
     params = init_energy_net(jax.random.PRNGKey(0), cfg)

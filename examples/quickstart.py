@@ -6,11 +6,17 @@ backpropagation-through-the-solver (exact), while the classic continuous
 adjoint does not — at a fraction of backprop's memory.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Uses the composable API: ``solve(f, x0, params, gradient=<strategy>)``
+returns a ``Solution`` whose ``.ys`` is differentiable (docs/api.md).
 """
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import odeint
+from repro.core import (ContinuousAdjoint, DirectBackprop, SymplecticAdjoint,
+                        solve)
 
 jax.config.update("jax_enable_x64", True)
 
@@ -21,23 +27,24 @@ def field(x, t, p):
 
 
 def main():
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     params = {"w1": jax.random.normal(k1, (2, 32)) * 0.5,
               "b1": jnp.zeros(32),
               "w2": jax.random.normal(k2, (32, 2)) * 0.5}
 
     # target: rotate points by 90 degrees
-    x0 = jax.random.normal(k3, (256, 2))
+    x0 = jax.random.normal(k3, (64 if smoke else 256, 2))
     target = x0 @ jnp.array([[0.0, 1.0], [-1.0, 0.0]])
 
-    def loss(params, mode):
-        y = odeint(field, x0, params, method="dopri5", grad_mode=mode,
-                   n_steps=8)
-        return jnp.mean((y - target) ** 2)
+    def loss(params, gradient):
+        sol = solve(field, x0, params, method="dopri5", gradient=gradient,
+                    stepping=8)
+        return jnp.mean((sol.ys - target) ** 2)
 
-    g_sym = jax.grad(loss)(params, "symplectic")
-    g_bp = jax.grad(loss)(params, "backprop")
-    g_adj = jax.grad(loss)(params, "adjoint")
+    g_sym = jax.grad(loss)(params, SymplecticAdjoint())
+    g_bp = jax.grad(loss)(params, DirectBackprop())
+    g_adj = jax.grad(loss)(params, ContinuousAdjoint())
 
     def rel(a, b):
         na = jnp.sqrt(sum(jnp.sum((x - y) ** 2) for x, y in zip(
@@ -54,12 +61,12 @@ def main():
     # train with the symplectic adjoint
     lr = 0.05
     p = params
-    for step in range(200):
-        l, g = jax.value_and_grad(loss)(p, "symplectic")
+    for step in range(20 if smoke else 200):
+        l, g = jax.value_and_grad(loss)(p, SymplecticAdjoint())
         p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
         if step % 50 == 0:
             print(f"step {step:4d}  loss {float(l):.5f}")
-    print(f"final loss {float(loss(p, 'symplectic')):.5f}")
+    print(f"final loss {float(loss(p, SymplecticAdjoint())):.5f}")
 
 
 if __name__ == "__main__":

@@ -34,7 +34,11 @@ class NodeConfig:
                  method="euler" the forward map is IDENTICAL to the discrete
                  stack, so grad_mode="symplectic" gives exact gradients with
                  O(R + s + one-unit) live memory.
-    grad_mode: symplectic | backprop | remat_step | remat_solve | adjoint.
+    grad_mode: a gradient strategy for ``repro.core.solve`` — either a
+      registered name (symplectic | backprop | remat_step | remat_solve |
+      adjoint) or a ``GradientStrategy`` instance carrying its own knobs
+      (e.g. ``ContinuousAdjoint(steps_multiplier=4)``); resolved via
+      ``repro.core.as_gradient`` at the solve call (core/api.py).
     combine_backend: auto | jnp | pallas — how RK stage combinations over the
       stacked slope buffers execute (auto = Pallas kernel on TPU, jnp oracle
       elsewhere; see core/combine.py).
@@ -42,7 +46,7 @@ class NodeConfig:
     mode: str = "off"
     method: str = "euler"
     n_steps: int = 0               # 0 => one step per repeat unit
-    grad_mode: str = "symplectic"
+    grad_mode: object = "symplectic"
     combine_backend: str = "auto"
 
 

@@ -1,11 +1,21 @@
 """Core neural-ODE library: tableaus, RK solvers, and the symplectic adjoint.
 
-Public API:
-    odeint, odeint_with_stats, AdaptiveConfig, get_tableau, ButcherTableau,
-    GRAD_MODES, COMBINE_BACKENDS, StageCombiner, get_combiner
+Public API (composable, core/api.py):
+    solve, Solution, SaveAt, GradientStrategy, SymplecticAdjoint,
+    DirectBackprop, RematStep, RematSolve, ContinuousAdjoint,
+    register_gradient, as_gradient, GRADIENT_REGISTRY, capability_matrix,
+    AdaptiveConfig, get_tableau, ButcherTableau,
+    COMBINE_BACKENDS, StageCombiner, get_combiner
+
+Legacy front-ends (deprecated shims, core/odeint.py):
+    odeint, odeint_with_stats, GRAD_MODES, TS_MODES
 """
 from .combine import (COMBINE_BACKENDS, StageCombiner, alloc_stages,
                       get_combiner, set_stage, stage_prefix, stage_suffix)
+from .api import (GRADIENT_REGISTRY, STEPPING_KINDS, SAVEAT_KINDS,
+                  ContinuousAdjoint, DirectBackprop, GradientStrategy,
+                  RematSolve, RematStep, SaveAt, Solution, SymplecticAdjoint,
+                  as_gradient, capability_matrix, register_gradient, solve)
 from .odeint import GRAD_MODES, TS_MODES, odeint, odeint_with_stats
 from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
                  apply_on_failure, hermite_observe, rk_solve_adaptive,
@@ -20,6 +30,10 @@ from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
 from .tableau import HERMITE_DENSE_W, TABLEAUS, ButcherTableau, get_tableau
 
 __all__ = [
+    "solve", "Solution", "SaveAt", "GradientStrategy", "SymplecticAdjoint",
+    "DirectBackprop", "RematStep", "RematSolve", "ContinuousAdjoint",
+    "register_gradient", "as_gradient", "GRADIENT_REGISTRY",
+    "capability_matrix", "STEPPING_KINDS", "SAVEAT_KINDS",
     "odeint", "odeint_with_stats", "GRAD_MODES", "TS_MODES",
     "AdaptiveConfig", "AdaptiveSolution", "ON_FAILURE_POLICIES",
     "COMBINE_BACKENDS", "StageCombiner", "get_combiner", "alloc_stages",

@@ -1,115 +1,68 @@
-"""Unified odeint front-end: one entry point, five gradient modes.
+"""Legacy ``odeint`` front-end — a thin compat shim over ``solve``.
 
-    y = odeint(f, x0, params, t0=0., t1=1., method="dopri5",
-               grad_mode="symplectic", n_steps=16)            # fixed grid
-    y = odeint(f, x0, params, ..., adaptive=AdaptiveConfig(...))
-    ys = odeint(f, x0, params, ts=jnp.array([.25, .5, 1.]), ...)  # SaveAt
+DEPRECATED: use the composable API in core/api.py instead
 
-``grad_mode``:
-  symplectic   — the paper: exact gradient, memory O(N + s + L)   [default]
-  backprop     — naive: exact gradient, memory O(N s L)
-  remat_step   — ANODE/ACA: exact gradient, memory O(N + s L)
-  remat_solve  — baseline scheme: exact gradient, memory O(N s L) in bwd
-  adjoint      — continuous adjoint: approximate gradient, memory O(L)
+    from repro.core import SaveAt, SymplecticAdjoint, solve
+    sol = solve(f, x0, params, saveat=SaveAt(t1=1.0),
+                gradient=SymplecticAdjoint(), stepping=16)
 
-``ts`` (SaveAt): observation times.  When given, the return value is the
-solution at each t in ``ts``, stacked along a new leading axis (len(ts) per
-leaf), and the solve ends at ts[-1] — pass t1 by including it in ts; passing
-both is an error.  ``ts`` must be monotone in the direction of integration.
-Supported by ALL five gradient modes on fixed grids; with ``adaptive`` by
-symplectic/adjoint (reverse-differentiable) and backprop (forward value and
-JVP only — reverse-mode through the adaptive lax.while_loop is unsupported,
-as for the plain adaptive backprop solve; use grad_mode="symplectic" for
-gradients of the realized adaptive map).  ``ts_mode``:
+Both entry points here only translate the old stringly-typed kwargs onto
+``solve`` and emit a ``DeprecationWarning`` (turned into an error for
+internal callers by the pytest config).  The kwarg -> object mapping, and
+the full capability matrix the old mode flags encoded, live in docs/api.md:
 
-  segment — split the solve into checkpointed segments at the observation
-            times; every observation is a segment endpoint, so the
-            differentiated map is exact (the symplectic mode's backward
-            pass runs Algorithm 2 per segment with the observation
-            cotangents injected at the boundaries, keeping the exact-
-            gradient guarantee).  Fixed-grid solves take ``n_steps`` PER
-            SEGMENT; adaptive solves thread the controller step across
-            segments and apply ``max_steps`` per segment.  Segments run
-            inside one lax.scan, so trace size and compile time are O(1)
-            in len(ts) (docs/adaptive.md).                    [auto default]
-  dense   — one unsegmented adaptive solve + 4th-order Hermite dense-output
-            interpolation at ts (StageCombiner.interpolate), so observation
-            times never perturb the step controller.  Observation error is
-            O(h^4); only grad_mode="backprop" with ``adaptive`` (and
-            odeint_with_stats) support it, and like every adaptive
-            backprop path it is forward-value/JVP only.
+    grad_mode="symplectic"            -> gradient=SymplecticAdjoint()
+    grad_mode="backprop"              -> gradient=DirectBackprop()
+    grad_mode="remat_step"            -> gradient=RematStep()
+    grad_mode="remat_solve"           -> gradient=RematSolve()
+    grad_mode="adjoint",
+      adjoint_steps_multiplier=k,
+      adjoint_adaptive_cfg=cfg        -> gradient=ContinuousAdjoint(
+                                             steps_multiplier=k,
+                                             bwd_adaptive=cfg)
+    t1=..., ts=...                    -> saveat=SaveAt(t1=...) / SaveAt(ts=...)
+    ts_mode="dense"                   -> saveat=SaveAt(ts=..., dense=True)
+    n_steps=N / adaptive=cfg          -> stepping=N / stepping=cfg
+    combine_backend=...               -> backend=...
 
-``combine_backend`` selects how every RK stage linear combination (forward
-stage states, step update, embedded error, the symplectic backward
-Lambda/lambda recursions, and the dense-output interpolation rows) is
-executed over the stacked stage buffers:
-
-  auto    — Pallas ``butcher_combine`` kernel on TPU, jnp oracle elsewhere
-  jnp     — one fused single-pass contraction per combine (dtype-preserving;
-            exact-to-rounding in float64)
-  pallas  — always the Pallas kernel (interpret mode off-TPU; f32 accumulate)
-
-Adaptive solves that exhaust max_steps/max_attempts without reaching the
-target time follow ``AdaptiveConfig.on_failure`` ("nan" poison by default;
-see docs/adaptive.md).
-
-See docs/stage_combine.md for the stacked-buffer layout and the HBM-pass
-arithmetic motivating the fused path, and docs/adaptive.md for the step
-controller and SaveAt design.
-
-The vector field signature is f(x, t, params) -> dx/dt over arbitrary pytrees.
-Times t0/t1/ts are not differentiated (zero cotangents), matching the paper's
-setting where T is fixed.
+``odeint`` returns ``Solution.ys``; ``odeint_with_stats`` returns
+``(Solution.ys, stats_dict)`` with the historical key set (fixed grids:
+n_steps/n_fevals; adaptive: + n_attempts/succeeded) and the historical
+no-poisoning behavior (failures are reported via ``stats["succeeded"]``,
+never NaN-poisoned or raised).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Union
+import dataclasses
+import warnings
+from typing import Optional, Union
 
-import jax
-import jax.numpy as jnp
-
-from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
-from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
-from .combine import resolve_backend
-from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 hermite_observe, rk_solve_adaptive,
-                 rk_solve_adaptive_saveat_stacked, rk_solve_fixed,
-                 segment_starts)
-from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
-                         odeint_symplectic_saveat,
-                         odeint_symplectic_saveat_adaptive)
-from .tableau import ButcherTableau, get_tableau
+from .api import ContinuousAdjoint, DirectBackprop, SaveAt, as_gradient, solve
+from .rk import AdaptiveConfig, VectorField
+from .tableau import ButcherTableau
 
 GRAD_MODES = ("symplectic", "backprop", "remat_step", "remat_solve",
               "adjoint")
 TS_MODES = ("auto", "segment", "dense")
 
 
-def _as_ts(ts, dtype) -> jnp.ndarray:
-    ts = jnp.asarray(ts, dtype=dtype)
-    if ts.ndim != 1 or ts.shape[0] == 0:
-        raise ValueError("ts must be a non-empty 1-D array of observation "
-                         f"times; got shape {ts.shape}")
-    return ts
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"odeint-style entry point {name}() is deprecated: use "
+        "repro.core.solve(f, x0, params, saveat=SaveAt(...), "
+        "gradient=<strategy>, stepping=<n_steps|AdaptiveConfig>) instead "
+        "(migration table in docs/api.md)",
+        DeprecationWarning, stacklevel=3)
 
 
-def _segmented(solve_one, x0, t0, ts):
-    """Generic SaveAt segmentation: chain per-segment solves, stack the
-    segment endpoints.  Observation cotangents are injected at the segment
-    boundaries automatically by reverse-mode through the composition (each
-    observation feeds both the output and the next segment's input).
-
-    ONE ``lax.scan`` over the segments: every segment shares the same step
-    budget (n_steps fixed grid / max_steps adaptive), so the per-segment
-    solve is a single traced scan body and trace/jaxpr size is O(1) in the
-    number of observations (see docs/adaptive.md)."""
-    def body(x, seg):
-        a, b = seg
-        x = solve_one(x, a, b)
-        return x, x
-
-    _, obs = jax.lax.scan(body, x0, (segment_starts(t0, ts), ts))
-    return obs
+def _gradient_of(grad_mode: str, adjoint_steps_multiplier: int,
+                 adjoint_adaptive_cfg: Optional[AdaptiveConfig]):
+    if grad_mode == "adjoint":
+        return ContinuousAdjoint(steps_multiplier=adjoint_steps_multiplier,
+                                 bwd_adaptive=adjoint_adaptive_cfg)
+    # historical behavior: the adjoint-only kwargs are silently ignored by
+    # every other mode.
+    return as_gradient(grad_mode)
 
 
 def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
@@ -121,108 +74,26 @@ def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
            adjoint_adaptive_cfg: Optional[AdaptiveConfig] = None,
            adjoint_steps_multiplier: int = 1,
            combine_backend: str = "auto"):
-    tab = get_tableau(method) if isinstance(method, str) else method
-    if grad_mode not in GRAD_MODES:
-        raise ValueError(f"grad_mode {grad_mode!r} not in {GRAD_MODES}")
+    """DEPRECATED compat shim: translate old kwargs onto ``solve``."""
+    _warn("odeint")
     if ts_mode not in TS_MODES:
         raise ValueError(f"ts_mode {ts_mode!r} not in {TS_MODES}")
-    resolve_backend(combine_backend)  # eager validation, single source
-    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
-
     if ts is not None:
         if t1 is not None:
+            # SaveAt would catch this too; raise here to keep the exact
+            # historical message.
             raise ValueError(
                 "pass EITHER t1 or ts: with observation times the solve "
                 "ends at ts[-1] (include the end time in ts)")
-        ts = _as_ts(ts, t0.dtype)
-        ts_mode = "segment" if ts_mode == "auto" else ts_mode
-
-        if ts_mode == "dense":
-            if adaptive is None or grad_mode != "backprop":
-                raise ValueError(
-                    "ts_mode='dense' needs an adaptive solve with "
-                    "grad_mode='backprop' (forward value / JVP only, like "
-                    "every adaptive backprop path; odeint_with_stats gives "
-                    "the non-differentiable equivalent, and ts_mode="
-                    "'segment' with grad_mode='symplectic' gives exact "
-                    "reverse-mode gradients)")
-            sol = rk_solve_adaptive(f, tab, x0, t0, ts[-1], params,
-                                    adaptive, combine_backend)
-            obs = hermite_observe(f, tab, sol, params, ts, combine_backend)
-            return apply_on_failure(obs, sol.succeeded, adaptive.on_failure)
-
-        if adaptive is not None:
-            if grad_mode == "symplectic":
-                return odeint_symplectic_saveat_adaptive(
-                    f, tab, adaptive, combine_backend, x0, t0, ts, params)
-            if grad_mode == "backprop":
-                obs, _ = rk_solve_adaptive_saveat_stacked(
-                    f, tab, x0, t0, ts, params, adaptive, combine_backend)
-                return obs
-            if grad_mode == "adjoint":
-                bwd = adjoint_adaptive_cfg or adaptive
-                return _segmented(
-                    lambda x, a, b: odeint_adjoint_adaptive(
-                        f, tab, adaptive, bwd, combine_backend,
-                        x, a, b, params),
-                    x0, t0, ts)
-            raise ValueError(
-                f"grad_mode {grad_mode!r} unsupported with adaptive "
-                "stepping")
-
-        if grad_mode == "symplectic":
-            return odeint_symplectic_saveat(f, tab, n_steps, combine_backend,
-                                            x0, t0, ts, params)
-        seg = {
-            "backprop": lambda x, a, b: odeint_backprop(
-                f, tab, n_steps, x, a, b, params, combine_backend),
-            "remat_step": lambda x, a, b: odeint_remat_step(
-                f, tab, n_steps, x, a, b, params, combine_backend),
-            "remat_solve": lambda x, a, b: odeint_remat_solve(
-                f, tab, n_steps, x, a, b, params, combine_backend),
-            "adjoint": lambda x, a, b: odeint_adjoint(
-                f, tab, n_steps, adjoint_steps_multiplier, combine_backend,
-                x, a, b, params),
-        }[grad_mode]
-        return _segmented(seg, x0, t0, ts)
-
-    t1 = jnp.asarray(1.0 if t1 is None else t1, dtype=t0.dtype)
-
-    if adaptive is not None:
-        if grad_mode == "symplectic":
-            return odeint_symplectic_adaptive(f, tab, adaptive,
-                                              combine_backend,
-                                              x0, t0, t1, params)
-        if grad_mode == "adjoint":
-            bwd = adjoint_adaptive_cfg or adaptive
-            return odeint_adjoint_adaptive(f, tab, adaptive, bwd,
-                                           combine_backend,
-                                           x0, t0, t1, params)
-        if grad_mode == "backprop":
-            # differentiable-through adaptive solve (expensive; for tests)
-            sol = rk_solve_adaptive(f, tab, x0, t0, t1, params,
-                                    adaptive, combine_backend)
-            return apply_on_failure(sol.x_final, sol.succeeded,
-                                    adaptive.on_failure)
-        raise ValueError(
-            f"grad_mode {grad_mode!r} unsupported with adaptive stepping")
-
-    if grad_mode == "symplectic":
-        return odeint_symplectic(f, tab, n_steps, combine_backend,
-                                 x0, t0, t1, params)
-    if grad_mode == "backprop":
-        return odeint_backprop(f, tab, n_steps, x0, t0, t1, params,
-                               combine_backend)
-    if grad_mode == "remat_step":
-        return odeint_remat_step(f, tab, n_steps, x0, t0, t1, params,
-                                 combine_backend)
-    if grad_mode == "remat_solve":
-        return odeint_remat_solve(f, tab, n_steps, x0, t0, t1, params,
-                                  combine_backend)
-    if grad_mode == "adjoint":
-        return odeint_adjoint(f, tab, n_steps, adjoint_steps_multiplier,
-                              combine_backend, x0, t0, t1, params)
-    raise AssertionError
+        saveat = SaveAt(ts=ts, dense=(ts_mode == "dense"))
+    else:
+        saveat = SaveAt(t1=1.0 if t1 is None else t1)
+    sol = solve(f, x0, params, saveat=saveat, method=method,
+                gradient=_gradient_of(grad_mode, adjoint_steps_multiplier,
+                                      adjoint_adaptive_cfg),
+                stepping=n_steps if adaptive is None else adaptive,
+                backend=combine_backend, t0=t0)
+    return sol.ys
 
 
 def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=None,
@@ -231,55 +102,33 @@ def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=None,
                       n_steps: int = 16,
                       adaptive: Optional[AdaptiveConfig] = None,
                       combine_backend: str = "auto"):
-    """Non-differentiable solve returning integration statistics.
+    """DEPRECATED compat shim: non-differentiable solve + stats dict.
 
-    With ``ts``: fixed-grid solves segment at the observation times
-    (n_steps per segment); adaptive solves run ONE unsegmented solve and
-    observe via Hermite dense output, so the stats reflect the controller's
-    own step sequence (2 extra f-evals per observation for the endpoint
-    slopes).  Adaptive stats gain ``succeeded`` (bool: reached the target
-    time within the budgets) and ``n_attempts``.
+    Translates onto ``solve`` with ``DirectBackprop`` and reshapes
+    ``Solution.stats`` into the historical dict.  With ``ts`` and an
+    adaptive config the observation scheme is Hermite dense output (ONE
+    unsegmented solve), exactly as before; the historical behavior of
+    reporting failure via ``stats["succeeded"]`` instead of the config's
+    on_failure policy is preserved by overriding the policy to "ignore".
     """
-    tab = get_tableau(method) if isinstance(method, str) else method
-    resolve_backend(combine_backend)  # eager validation, single source
-    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
-
+    _warn("odeint_with_stats")
+    if ts is not None and t1 is not None:
+        raise ValueError("pass EITHER t1 or ts (the solve ends at ts[-1])")
     if ts is not None:
-        if t1 is not None:
-            raise ValueError("pass EITHER t1 or ts (the solve ends at "
-                             "ts[-1])")
-        ts = _as_ts(ts, t0.dtype)
-        n_obs = ts.shape[0]
-        if adaptive is None:
-            obs = _segmented(
-                lambda x, a, b: rk_solve_fixed(
-                    f, tab, x, a, b, n_steps, params,
-                    combine_backend).x_final,
-                x0, t0, ts)
-            return obs, {"n_steps": n_obs * n_steps,
-                         "n_fevals": n_obs * n_steps * tab.s}
-        sol = rk_solve_adaptive(f, tab, x0, t0, ts[-1], params, adaptive,
-                                combine_backend)
-        obs = hermite_observe(f, tab, sol, params, ts, combine_backend)
-        return obs, {"n_steps": sol.n_accepted,
-                     "n_fevals": sol.n_fevals + 2 * n_obs,
-                     "n_attempts": sol.n_attempts,
-                     "succeeded": sol.succeeded}
-
-    t1 = jnp.asarray(1.0 if t1 is None else t1, dtype=t0.dtype)
+        saveat = SaveAt(ts=ts, dense=(adaptive is not None))
+    else:
+        saveat = SaveAt(t1=1.0 if t1 is None else t1)
     if adaptive is None:
-        sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
-                             combine_backend)
-        # the fixed-grid driver skips the embedded error estimate, so the
-        # cost is exactly s evaluations per step — including for tableaus
-        # whose error weights would need an extra f(x_{n+1}) evaluation
-        # (err_uses_fsal), which the old always-estimate path silently paid
-        # without it ever being counted here.
-        return sol.x_final, {"n_steps": n_steps,
-                             "n_fevals": n_steps * tab.s}
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, adaptive,
-                            combine_backend)
-    return sol.x_final, {"n_steps": sol.n_accepted,
-                         "n_fevals": sol.n_fevals,
-                         "n_attempts": sol.n_attempts,
-                         "succeeded": sol.succeeded}
+        stepping = n_steps
+    else:
+        stepping = dataclasses.replace(adaptive, on_failure="ignore")
+    sol = solve(f, x0, params, saveat=saveat, method=method,
+                gradient=DirectBackprop(), stepping=stepping,
+                backend=combine_backend, t0=t0)
+    if adaptive is None:
+        stats = {"n_steps": sol.stats["n_steps"],
+                 "n_fevals": sol.stats["n_fevals"]}
+    else:
+        stats = dict(sol.stats)
+        stats["succeeded"] = sol.success
+    return sol.ys, stats

@@ -13,12 +13,12 @@ Dynamics network: concatsquash MLP (FFJORD's layer: W x * sigmoid(gate(t))
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import AdaptiveConfig, odeint
+from repro.core import AdaptiveConfig, SaveAt, as_gradient, solve
 from repro.nn.common import dense_init, split_keys
 
 
@@ -30,7 +30,8 @@ class CNFConfig:
     t1: float = 1.0
     trace: str = "hutchinson"        # "hutchinson" | "exact"
     method: str = "dopri5"
-    grad_mode: str = "symplectic"
+    # a registered strategy name OR a GradientStrategy instance (core/api.py)
+    grad_mode: Any = "symplectic"
     combine_backend: str = "auto"    # stage-combine dispatch (core/combine.py)
     n_steps: int = 16
     adaptive: bool = False
@@ -109,11 +110,12 @@ def cnf_forward(params, u, eps, cfg: CNFConfig):
 
     def body(carry, comp):
         x, dlp = carry
-        x, dlp_i, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
-                             t0=0.0, t1=cfg.t1, method=cfg.method,
-                             grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
-                             adaptive=adaptive,
-                             combine_backend=cfg.combine_backend)
+        x, dlp_i, _ = solve(
+            field, (x, jnp.zeros_like(dlp), eps), comp,
+            saveat=SaveAt(t1=cfg.t1), method=cfg.method,
+            gradient=as_gradient(cfg.grad_mode),
+            stepping=adaptive if adaptive is not None else cfg.n_steps,
+            backend=cfg.combine_backend).ys
         return (x, dlp + dlp_i), None
 
     (x, dlp), _ = jax.lax.scan(body, (u, dlp0), params["components"])
@@ -147,11 +149,12 @@ def cnf_flow_path(params, u, eps, cfg: CNFConfig, ts):
 
     def body(carry, comp):
         x, dlp = carry
-        xo, dlpo, _ = odeint(field, (x, jnp.zeros_like(dlp), eps), comp,
-                             t0=0.0, ts=ts, method=cfg.method,
-                             grad_mode=cfg.grad_mode, n_steps=cfg.n_steps,
-                             adaptive=adaptive,
-                             combine_backend=cfg.combine_backend)
+        xo, dlpo, _ = solve(
+            field, (x, jnp.zeros_like(dlp), eps), comp,
+            saveat=SaveAt(ts=ts), method=cfg.method,
+            gradient=as_gradient(cfg.grad_mode),
+            stepping=adaptive if adaptive is not None else cfg.n_steps,
+            backend=cfg.combine_backend).ys
         return (xo[-1], dlp + dlpo[-1]), (xo, dlp[None] + dlpo)
 
     _, (xs_path, dlp_path) = jax.lax.scan(body, (u, dlp0),

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import odeint
+from repro.core import SaveAt, as_gradient, solve
 from repro.nn.common import dense_init, embed_init, no_shard, split_keys
 from repro.nn.norm import init_rmsnorm, rmsnorm
 from .blocks import init_layer, init_layer_cache, layer_forward
@@ -264,10 +264,11 @@ def _depth_field(cfg: ArchConfig, shard):
 
 def _node_depth_solve(params, cfg: ArchConfig, x, shard):
     n_steps = cfg.node.n_steps or cfg.n_repeats
-    return odeint(_depth_field(cfg, shard), x, params["unit"], t0=0.0,
-                  t1=1.0, method=cfg.node.method,
-                  grad_mode=cfg.node.grad_mode, n_steps=n_steps,
-                  combine_backend=cfg.node.combine_backend)
+    return solve(_depth_field(cfg, shard), x, params["unit"],
+                 saveat=SaveAt(t1=1.0), method=cfg.node.method,
+                 gradient=as_gradient(cfg.node.grad_mode),
+                 stepping=n_steps,
+                 backend=cfg.node.combine_backend).ys
 
 
 def node_depth_states(params, cfg: ArchConfig, x, depths, shard=no_shard):
@@ -288,7 +289,8 @@ def node_depth_states(params, cfg: ArchConfig, x, depths, shard=no_shard):
     # per-segment step budget: keep the TOTAL grid comparable to the
     # unobserved solve's n_steps over [0, 1]
     seg_steps = max(1, -(-n_steps // depths.shape[0]))
-    return odeint(_depth_field(cfg, shard), x, params["unit"], t0=0.0,
-                  ts=depths, method=cfg.node.method,
-                  grad_mode=cfg.node.grad_mode, n_steps=seg_steps,
-                  combine_backend=cfg.node.combine_backend)
+    return solve(_depth_field(cfg, shard), x, params["unit"],
+                 saveat=SaveAt(ts=depths), method=cfg.node.method,
+                 gradient=as_gradient(cfg.node.grad_mode),
+                 stepping=seg_steps,
+                 backend=cfg.node.combine_backend).ys

@@ -7,7 +7,7 @@ Learn the energy functional H(u) of a 1-D periodic PDE with a neural net
                                G = d^2/dx^2 (Cahn-Hilliard)
 
 Periodic central differences discretize G.  Training interpolates successive
-snapshots: loss = MSE(odeint(u_k, dt), u_{k+1}) — which is exactly the
+snapshots: loss = MSE(solve(u_k -> dt).ys, u_{k+1}) — which is exactly the
 paper's setting where dopri8 (13 stages) shines and the symplectic adjoint's
 O(s) stage-checkpoint advantage is largest.
 """
@@ -18,7 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import odeint
+from repro.core import SaveAt, as_gradient, solve
 from repro.nn.common import dense_init, split_keys
 
 
@@ -30,7 +30,8 @@ class PhysicsConfig:
     hidden: int = 64
     system: str = "kdv"            # "kdv" | "cahn_hilliard"
     method: str = "dopri8"
-    grad_mode: str = "symplectic"
+    # a registered strategy name OR a GradientStrategy instance (core/api.py)
+    grad_mode: object = "symplectic"
     combine_backend: str = "auto"  # stage-combine dispatch (core/combine.py)
     n_steps: int = 4
     dt: float = 0.1                # snapshot interval
@@ -88,10 +89,10 @@ def hnn_field(system: str, dx: float):
 
 
 def predict_next(params, u, cfg: PhysicsConfig):
-    return odeint(hnn_field(cfg.system, cfg.dx), u, params, t0=0.0,
-                  t1=cfg.dt, method=cfg.method, grad_mode=cfg.grad_mode,
-                  n_steps=cfg.n_steps,
-                  combine_backend=cfg.combine_backend)
+    return solve(hnn_field(cfg.system, cfg.dx), u, params,
+                 saveat=SaveAt(t1=cfg.dt), method=cfg.method,
+                 gradient=as_gradient(cfg.grad_mode), stepping=cfg.n_steps,
+                 backend=cfg.combine_backend).ys
 
 
 def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
@@ -108,10 +109,10 @@ def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
     Returns (horizon, B, grid).
     """
     ts = cfg.dt * jnp.arange(1, horizon + 1)
-    return odeint(hnn_field(cfg.system, cfg.dx), u0, params, t0=0.0,
-                  ts=ts, method=cfg.method, grad_mode=cfg.grad_mode,
-                  n_steps=cfg.n_steps,
-                  combine_backend=cfg.combine_backend)
+    return solve(hnn_field(cfg.system, cfg.dx), u0, params,
+                 saveat=SaveAt(ts=ts), method=cfg.method,
+                 gradient=as_gradient(cfg.grad_mode), stepping=cfg.n_steps,
+                 backend=cfg.combine_backend).ys
 
 
 def physics_loss(params, u_k, u_k1, cfg: PhysicsConfig):

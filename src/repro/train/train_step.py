@@ -3,8 +3,11 @@ AdamW, with optional microbatch gradient accumulation.
 
 One factory serves every assigned architecture: decoder LMs (dense / MoE /
 SSM / hybrid), the VLM (patch-embedding prefix), and the enc-dec audio model.
-The gradient scheme is selected by the arch config's NodeConfig (the paper's
-symplectic adjoint being the headline mode).
+The gradient scheme is selected by the arch config's NodeConfig.grad_mode —
+a registered strategy name or a ``repro.core.GradientStrategy`` instance
+(the paper's ``SymplecticAdjoint`` being the headline mode); the LM forward
+resolves it through ``repro.core.solve`` (core/api.py), so a newly
+registered strategy is trainable here with zero changes to this factory.
 """
 from __future__ import annotations
 

@@ -1,0 +1,488 @@
+"""Composable solve() API tests.
+
+Covers the api_redesign acceptance criteria:
+  * ``Solution`` is a well-behaved pytree: round-trips through ``jit``,
+    ``vmap`` over batched x0, and ``jax.grad`` of losses on ``sol.ys``;
+  * golden equivalence: the ``odeint`` / ``odeint_with_stats`` shims pin
+    EXACTLY (values and stats dicts) to the pre-redesign behavior — i.e.
+    to the unchanged underlying drivers and the historical stats formulas —
+    for all five gradient modes on fixed and adaptive grids;
+  * a new gradient strategy registers and solves WITHOUT editing solve();
+  * the declarative capability matrix rejects every illegal combination
+    with a uniform error;
+  * the satellite validations: eager ts-monotonicity rejection and
+    ContinuousAdjoint.steps_multiplier >= 1 (also via the legacy kwarg).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (AdaptiveConfig, ContinuousAdjoint, DirectBackprop,
+                        GRAD_MODES, RematSolve, RematStep, SaveAt, Solution,
+                        SymplecticAdjoint, apply_on_failure, as_gradient,
+                        capability_matrix, get_tableau, hermite_observe,
+                        odeint, odeint_adjoint, odeint_adjoint_adaptive,
+                        odeint_backprop, odeint_remat_solve,
+                        odeint_remat_step, odeint_symplectic,
+                        odeint_symplectic_adaptive, odeint_symplectic_saveat,
+                        odeint_symplectic_saveat_adaptive, odeint_with_stats,
+                        register_gradient, rk_solve_adaptive, solve)
+from repro.core import api as api_mod
+
+
+def mlp_field(x, t, params):
+    h = jnp.tanh(params["w1"] @ x + params["b1"] + t)
+    return params["w2"] @ h + params["b2"]
+
+
+def make_params(key, dim=4, hidden=6):
+    ks = jax.random.split(key, 4)
+    return {
+        "w1": jax.random.normal(ks[0], (hidden, dim)) * 0.5,
+        "b1": jax.random.normal(ks[1], (hidden,)) * 0.1,
+        "w2": jax.random.normal(ks[2], (dim, hidden)) * 0.5,
+        "b2": jax.random.normal(ks[3], (dim,)) * 0.1,
+    }
+
+
+PARAMS = make_params(jax.random.PRNGKey(0))
+X0 = jax.random.normal(jax.random.PRNGKey(1), (4,))
+TS3 = jnp.array([0.25, 0.5, 0.875])
+CFG = AdaptiveConfig(rtol=1e-6, atol=1e-8, max_steps=64, initial_step=0.05)
+TAB = get_tableau("dopri5")
+
+
+def assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def shim_odeint(*args, **kwargs):
+    with pytest.warns(DeprecationWarning, match="odeint-style"):
+        return odeint(*args, **kwargs)
+
+
+def shim_with_stats(*args, **kwargs):
+    with pytest.warns(DeprecationWarning, match="odeint-style"):
+        return odeint_with_stats(*args, **kwargs)
+
+
+# --- Solution as a pytree ----------------------------------------------------
+
+def test_solution_jit_round_trip():
+    def run(x0):
+        return solve(mlp_field, x0, PARAMS, stepping=6)
+
+    sol = run(X0)
+    jsol = jax.jit(run)(X0)
+    assert isinstance(jsol, Solution)
+    np.testing.assert_allclose(np.asarray(jsol.ys), np.asarray(sol.ys),
+                               rtol=1e-14)  # jit may refuse by 1 ulp
+    assert_trees_equal(sol.stats, jsol.stats)
+    assert bool(jsol.success)
+    # flatten/unflatten identity
+    leaves, treedef = jax.tree_util.tree_flatten(sol)
+    sol2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(sol2, Solution)
+    assert_trees_equal(sol.final_state, sol2.final_state)
+
+
+@pytest.mark.parametrize("stepping", [6, CFG], ids=["fixed", "adaptive"])
+def test_solution_vmap_batched_x0(stepping):
+    xb = jnp.stack([X0, 2.0 * X0, -X0])
+    vsol = jax.vmap(lambda x: solve(mlp_field, x, PARAMS,
+                                    stepping=stepping))(xb)
+    assert vsol.ys.shape == (3, 4)
+    assert vsol.stats["n_steps"].shape == (3,)
+    assert vsol.success.shape == (3,)
+    for i in range(3):
+        one = solve(mlp_field, xb[i], PARAMS, stepping=stepping)
+        np.testing.assert_allclose(np.asarray(vsol.ys[i]),
+                                   np.asarray(one.ys), rtol=1e-12)
+        assert int(vsol.stats["n_steps"][i]) == int(one.stats["n_steps"])
+
+
+def test_solution_grad_on_ys():
+    def loss(x0, params, gradient):
+        sol = solve(mlp_field, x0, params, saveat=SaveAt(ts=TS3),
+                    gradient=gradient, stepping=5)
+        return jnp.sum(jnp.sin(sol.ys) ** 2)
+
+    g_sym = jax.grad(loss, argnums=(0, 1))(X0, PARAMS, SymplecticAdjoint())
+    g_ref = jax.grad(loss, argnums=(0, 1))(X0, PARAMS, DirectBackprop())
+    for a, b in zip(jax.tree_util.tree_leaves(g_sym),
+                    jax.tree_util.tree_leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_solution_stats_fixed_are_static_counts():
+    sol = solve(mlp_field, X0, PARAMS, method="dopri5", stepping=7)
+    assert int(sol.stats["n_steps"]) == 7
+    assert int(sol.stats["n_fevals"]) == 7 * TAB.s
+    assert int(sol.stats["n_attempts"]) == 7
+    sol = solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=TS3), stepping=4)
+    assert int(sol.stats["n_steps"]) == 3 * 4
+    assert_trees_equal(sol.final_state, sol.ys[-1])
+
+
+def test_solution_stats_adaptive_match_controller():
+    ref = rk_solve_adaptive(mlp_field, TAB, X0, jnp.asarray(0.0), 1.0,
+                            PARAMS, CFG)
+    for gradient in (SymplecticAdjoint(), DirectBackprop(),
+                     ContinuousAdjoint()):
+        sol = solve(mlp_field, X0, PARAMS, gradient=gradient, stepping=CFG)
+        assert int(sol.stats["n_steps"]) == int(ref.n_accepted)
+        assert int(sol.stats["n_fevals"]) == int(ref.n_fevals)
+        assert int(sol.stats["n_attempts"]) == int(ref.n_attempts)
+        assert bool(sol.success)
+
+
+# --- golden equivalence: shims == pre-redesign drivers -----------------------
+
+FIXED_DRIVERS = {
+    "symplectic": lambda n, x, t0, t1: odeint_symplectic(
+        mlp_field, TAB, n, "auto", x, t0, t1, PARAMS),
+    "backprop": lambda n, x, t0, t1: odeint_backprop(
+        mlp_field, TAB, n, x, t0, t1, PARAMS, "auto"),
+    "remat_step": lambda n, x, t0, t1: odeint_remat_step(
+        mlp_field, TAB, n, x, t0, t1, PARAMS, "auto"),
+    "remat_solve": lambda n, x, t0, t1: odeint_remat_solve(
+        mlp_field, TAB, n, x, t0, t1, PARAMS, "auto"),
+    "adjoint": lambda n, x, t0, t1: odeint_adjoint(
+        mlp_field, TAB, n, 1, "auto", x, t0, t1, PARAMS),
+}
+
+
+@pytest.mark.parametrize("mode", list(GRAD_MODES))
+def test_golden_fixed_t1(mode):
+    y = shim_odeint(mlp_field, X0, PARAMS, t1=1.0, method="dopri5",
+                    grad_mode=mode, n_steps=6)
+    t0 = jnp.asarray(0.0)
+    ref = FIXED_DRIVERS[mode](6, X0, t0, jnp.asarray(1.0))
+    assert_trees_equal(y, ref)
+    # and the new entry point is the same map
+    sol = solve(mlp_field, X0, PARAMS, saveat=SaveAt(t1=1.0),
+                gradient=mode, stepping=6)
+    assert_trees_equal(y, sol.ys)
+    assert_trees_equal(sol.ys, sol.final_state)
+
+
+@pytest.mark.parametrize("mode", list(GRAD_MODES))
+def test_golden_fixed_ts_segmented(mode):
+    ys = shim_odeint(mlp_field, X0, PARAMS, ts=TS3, method="dopri5",
+                     grad_mode=mode, n_steps=4)
+    if mode == "symplectic":
+        ref = odeint_symplectic_saveat(mlp_field, TAB, 4, "auto", X0,
+                                       jnp.asarray(0.0), TS3, PARAMS)
+        assert_trees_equal(ys, ref)
+    else:
+        # pre-redesign: chained per-segment driver solves
+        x, t_prev = X0, jnp.asarray(0.0)
+        for i in range(3):
+            x = FIXED_DRIVERS[mode](4, x, t_prev, TS3[i])
+            np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(x),
+                                       rtol=1e-12, atol=1e-14)
+            t_prev = TS3[i]
+
+
+@pytest.mark.parametrize("mode", ["symplectic", "backprop", "adjoint"])
+def test_golden_adaptive_t1(mode):
+    y = shim_odeint(mlp_field, X0, PARAMS, t1=1.0, method="dopri5",
+                    grad_mode=mode, adaptive=CFG)
+    t0, t1 = jnp.asarray(0.0), jnp.asarray(1.0)
+    if mode == "symplectic":
+        ref = odeint_symplectic_adaptive(mlp_field, TAB, CFG, "auto",
+                                         X0, t0, t1, PARAMS)
+    elif mode == "adjoint":
+        ref = odeint_adjoint_adaptive(mlp_field, TAB, CFG, CFG, "auto",
+                                      X0, t0, t1, PARAMS)
+    else:
+        sol = rk_solve_adaptive(mlp_field, TAB, X0, t0, t1, PARAMS, CFG)
+        ref = apply_on_failure(sol.x_final, sol.succeeded, CFG.on_failure)
+    assert_trees_equal(y, ref)
+
+
+@pytest.mark.parametrize("mode", ["symplectic", "backprop", "adjoint"])
+def test_golden_adaptive_ts(mode):
+    ys = shim_odeint(mlp_field, X0, PARAMS, ts=TS3, method="dopri5",
+                     grad_mode=mode, adaptive=CFG)
+    assert ys.shape == (3, 4)
+    if mode == "symplectic":
+        ref = odeint_symplectic_saveat_adaptive(
+            mlp_field, TAB, CFG, "auto", X0, jnp.asarray(0.0), TS3, PARAMS)
+        assert_trees_equal(ys, ref)
+    elif mode == "adjoint":
+        # pre-redesign: per-segment odeint_adjoint_adaptive (controller
+        # RESTARTS at each observation boundary)
+        x, t_prev = X0, jnp.asarray(0.0)
+        for i in range(3):
+            x = odeint_adjoint_adaptive(mlp_field, TAB, CFG, CFG, "auto",
+                                        x, t_prev, TS3[i], PARAMS)
+            np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(x),
+                                       rtol=1e-12, atol=1e-14)
+            t_prev = TS3[i]
+
+
+def test_golden_symplectic_gradient_through_shim():
+    def loss_shim(x0, params):
+        y = odeint(mlp_field, x0, params, t1=1.0, method="dopri5",
+                   grad_mode="symplectic", n_steps=6)
+        return jnp.sum(jnp.tanh(y) ** 2)
+
+    def loss_driver(x0, params):
+        y = odeint_symplectic(mlp_field, TAB, 6, "auto", x0,
+                              jnp.asarray(0.0), jnp.asarray(1.0), params)
+        return jnp.sum(jnp.tanh(y) ** 2)
+
+    with pytest.warns(DeprecationWarning, match="odeint-style"):
+        g_shim = jax.grad(loss_shim, argnums=(0, 1))(X0, PARAMS)
+    g_drv = jax.grad(loss_driver, argnums=(0, 1))(X0, PARAMS)
+    assert_trees_equal(g_shim, g_drv)
+
+
+def test_golden_with_stats_fixed():
+    y, stats = shim_with_stats(mlp_field, X0, PARAMS, t1=1.0,
+                               method="dopri5", n_steps=5)
+    assert sorted(stats) == ["n_fevals", "n_steps"]
+    assert int(stats["n_steps"]) == 5
+    assert int(stats["n_fevals"]) == 5 * TAB.s
+    assert_trees_equal(y, FIXED_DRIVERS["backprop"](
+        5, X0, jnp.asarray(0.0), jnp.asarray(1.0)))
+
+    ys, stats = shim_with_stats(mlp_field, X0, PARAMS, ts=TS3,
+                                method="dopri5", n_steps=5)
+    assert sorted(stats) == ["n_fevals", "n_steps"]
+    assert int(stats["n_steps"]) == 3 * 5
+    assert int(stats["n_fevals"]) == 3 * 5 * TAB.s
+
+
+def test_golden_with_stats_adaptive():
+    y, stats = shim_with_stats(mlp_field, X0, PARAMS, t1=1.0,
+                               method="dopri5", adaptive=CFG)
+    sol = rk_solve_adaptive(mlp_field, TAB, X0, jnp.asarray(0.0), 1.0,
+                            PARAMS, CFG)
+    assert sorted(stats) == ["n_attempts", "n_fevals", "n_steps",
+                             "succeeded"]
+    assert int(stats["n_steps"]) == int(sol.n_accepted)
+    assert int(stats["n_fevals"]) == int(sol.n_fevals)
+    assert int(stats["n_attempts"]) == int(sol.n_attempts)
+    assert bool(stats["succeeded"])
+    assert_trees_equal(y, sol.x_final)
+
+
+def test_golden_with_stats_adaptive_ts_is_dense():
+    ys, stats = shim_with_stats(mlp_field, X0, PARAMS, ts=TS3,
+                                method="dopri5", adaptive=CFG)
+    sol = rk_solve_adaptive(mlp_field, TAB, X0, jnp.asarray(0.0), TS3[-1],
+                            PARAMS, CFG)
+    ref = hermite_observe(mlp_field, TAB, sol, PARAMS, TS3)
+    assert_trees_equal(ys, ref)
+    assert int(stats["n_steps"]) == int(sol.n_accepted)
+    assert int(stats["n_fevals"]) == int(sol.n_fevals) + 2 * 3
+
+
+def test_golden_with_stats_failure_not_poisoned():
+    # historical contract: with_stats NEVER poisons/raises — failure is
+    # reported via stats["succeeded"], even when the config says otherwise.
+    tight = AdaptiveConfig(rtol=1e-14, atol=1e-16, max_steps=4,
+                           initial_step=0.01, on_failure="nan")
+    y, stats = shim_with_stats(mlp_field, X0, PARAMS, t1=1.0,
+                               method="dopri5", adaptive=tight)
+    assert not bool(stats["succeeded"])
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# --- extensible gradient registry --------------------------------------------
+
+def test_register_toy_strategy_without_editing_solve():
+    @register_gradient
+    @dataclasses.dataclass(frozen=True)
+    class ToyDoubleSteps(api_mod.GradientStrategy):
+        """Backprop with a doubled step budget — three lines of hooks."""
+        name = "toy_double"
+        capabilities = frozenset({("fixed", "t1"), ("fixed", "ts")})
+
+        def fixed(self, ctx, x0, t0, t1, params):
+            return odeint_backprop(ctx.f, ctx.tab, 2 * ctx.n_steps,
+                                   x0, t0, t1, params, ctx.backend)
+
+    try:
+        sol = solve(mlp_field, X0, PARAMS, gradient="toy_double",
+                    stepping=3)
+        ref = solve(mlp_field, X0, PARAMS, gradient="backprop", stepping=6)
+        assert_trees_equal(sol.ys, ref.ys)
+        # the default SaveAt segmentation comes for free
+        sol = solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=TS3),
+                    gradient=ToyDoubleSteps(), stepping=3)
+        assert sol.ys.shape == (3, 4)
+        # and the capability matrix guards the cells it did not claim
+        with pytest.raises(ValueError, match="toy_double"):
+            solve(mlp_field, X0, PARAMS, gradient="toy_double",
+                  stepping=CFG)
+        assert "toy_double" in capability_matrix()
+    finally:
+        del api_mod.GRADIENT_REGISTRY["toy_double"]
+
+
+def test_minimal_adaptive_strategy_stats_match_its_own_solve():
+    """A strategy implementing ONLY adaptive() gets SaveAt values from the
+    default restart-per-segment segmentation — and the default stats
+    replay must describe that same restarting sequence, not a threaded
+    one."""
+    @register_gradient
+    @dataclasses.dataclass(frozen=True)
+    class ToyAdaptive(api_mod.GradientStrategy):
+        name = "toy_adaptive"
+        capabilities = frozenset({("adaptive", "t1"), ("adaptive", "ts")})
+
+        def adaptive(self, ctx, x0, t0, t1, params):
+            sol = rk_solve_adaptive(ctx.f, ctx.tab, x0, t0, t1, params,
+                                    ctx.adaptive, ctx.backend)
+            return apply_on_failure(sol.x_final, sol.succeeded,
+                                    ctx.adaptive.on_failure)
+
+    try:
+        sol = solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=TS3),
+                    gradient="toy_adaptive", stepping=CFG)
+        # reference: replay the restarting segmentation by hand
+        x, t_prev, n_acc = X0, jnp.asarray(0.0), 0
+        for i in range(3):
+            seg = rk_solve_adaptive(mlp_field, TAB, x, t_prev, TS3[i],
+                                    PARAMS, CFG)
+            x, t_prev, n_acc = seg.x_final, TS3[i], n_acc + int(seg.n_accepted)
+            np.testing.assert_allclose(np.asarray(sol.ys[i]),
+                                       np.asarray(x), rtol=1e-12)
+        assert int(sol.stats["n_steps"]) == n_acc
+        assert bool(sol.success)
+    finally:
+        del api_mod.GRADIENT_REGISTRY["toy_adaptive"]
+
+
+def test_as_gradient_spec_forms():
+    assert isinstance(as_gradient("symplectic"), SymplecticAdjoint)
+    assert isinstance(as_gradient(DirectBackprop), DirectBackprop)
+    adj = ContinuousAdjoint(steps_multiplier=3)
+    assert as_gradient(adj) is adj
+    with pytest.raises(ValueError, match="unknown gradient strategy"):
+        as_gradient("nope")
+    with pytest.raises(TypeError):
+        as_gradient(42)
+
+
+# --- capability matrix -------------------------------------------------------
+
+def test_capability_matrix_shape_and_errors():
+    mat = capability_matrix()
+    for name in GRAD_MODES:
+        assert name in mat
+        assert len(mat[name]) == 6  # 2 steppings x 3 saveat kinds
+        assert not mat[name][("fixed", "dense")]  # dense needs a controller
+    assert mat["backprop"][("adaptive", "dense")]
+    for bad_gradient, stepping, saveat in [
+            (RematStep(), CFG, None),
+            (RematSolve(), CFG, None),
+            (RematStep(), CFG, SaveAt(ts=TS3)),
+            (SymplecticAdjoint(), CFG, SaveAt(ts=TS3, dense=True)),
+            (DirectBackprop(), 4, SaveAt(ts=TS3, dense=True))]:
+        with pytest.raises(ValueError,
+                           match="legal .stepping.saveat. combinations"):
+            solve(mlp_field, X0, PARAMS, saveat=saveat,
+                  gradient=bad_gradient, stepping=stepping)
+
+
+def test_stepping_validation():
+    with pytest.raises(ValueError, match="needs >= 1 steps"):
+        solve(mlp_field, X0, PARAMS, stepping=0)
+    with pytest.raises(TypeError, match="stepping must be"):
+        solve(mlp_field, X0, PARAMS, stepping="adaptive")
+
+
+def test_saveat_validation():
+    with pytest.raises(ValueError, match="EITHER t1 or ts"):
+        SaveAt(t1=1.0, ts=TS3)
+    with pytest.raises(ValueError, match="one of t1"):
+        SaveAt()
+    with pytest.raises(ValueError, match="dense"):
+        SaveAt(t1=1.0, dense=True)
+    with pytest.raises(ValueError, match="EITHER t1 or ts"):
+        shim_odeint(mlp_field, X0, PARAMS, t1=1.0, ts=TS3)
+
+
+# --- satellite: ts monotonicity contract -------------------------------------
+
+def test_ts_rejects_descending_against_direction():
+    # forward t0 but descending ts: direction flips mid-solve
+    with pytest.raises(ValueError, match="monotone"):
+        solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=jnp.array(
+            [0.875, 0.5, 0.25])), stepping=4, t0=0.0)
+
+
+def test_ts_rejects_shuffled():
+    for bad in ([0.5, 0.25, 0.875], [0.25, 0.875, 0.5]):
+        with pytest.raises(ValueError, match="monotone"):
+            solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=jnp.array(bad)),
+                  stepping=4)
+        with pytest.raises(ValueError, match="monotone"):
+            shim_odeint(mlp_field, X0, PARAMS, ts=jnp.array(bad), n_steps=4)
+
+
+def test_ts_allows_duplicates_and_reverse_time():
+    sol = solve(mlp_field, X0, PARAMS,
+                saveat=SaveAt(ts=jnp.array([0.5, 0.5, 1.0])), stepping=4)
+    assert_trees_equal(sol.ys[0], sol.ys[1])
+    sol = solve(mlp_field, X0, PARAMS,
+                saveat=SaveAt(ts=jnp.array([0.6, 0.3, 0.0])), stepping=4,
+                t0=1.0)
+    assert sol.ys.shape == (3, 4)
+
+
+def test_ts_tracer_passes_through():
+    # non-concrete ts cannot be validated at trace time; the solve must
+    # still trace and run (the contract is on the caller).
+    ys = jax.jit(lambda ts: solve(mlp_field, X0, PARAMS,
+                                  saveat=SaveAt(ts=ts),
+                                  stepping=4).ys)(TS3)
+    ref = solve(mlp_field, X0, PARAMS, saveat=SaveAt(ts=TS3), stepping=4).ys
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ref), rtol=1e-12)
+
+
+# --- satellite: ContinuousAdjoint.steps_multiplier >= 1 ----------------------
+
+def test_adjoint_steps_multiplier_validation():
+    with pytest.raises(ValueError, match="steps_multiplier"):
+        ContinuousAdjoint(steps_multiplier=0)
+    with pytest.raises(ValueError, match="steps_multiplier"):
+        ContinuousAdjoint(steps_multiplier=-2)
+    assert ContinuousAdjoint(steps_multiplier=2).steps_multiplier == 2
+    # numpy integers (configs, loaded arrays) are normalized, like
+    # solve()'s stepping
+    adj = ContinuousAdjoint(steps_multiplier=np.int64(2))
+    assert adj.steps_multiplier == 2 and type(adj.steps_multiplier) is int
+    with pytest.raises(ValueError, match="steps_multiplier"):
+        ContinuousAdjoint(steps_multiplier=np.int64(0))
+    # the legacy kwarg funnels through the same check
+    with pytest.raises(ValueError, match="steps_multiplier"):
+        shim_odeint(mlp_field, X0, PARAMS, t1=1.0, grad_mode="adjoint",
+                    adjoint_steps_multiplier=0)
+    # historical contract: the adjoint-only kwargs are ignored by other
+    # modes, so a bogus multiplier must NOT trip them
+    y = shim_odeint(mlp_field, X0, PARAMS, t1=1.0, grad_mode="symplectic",
+                    adjoint_steps_multiplier=0, n_steps=4)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# --- deprecation surface -----------------------------------------------------
+
+def test_shims_warn_deprecation():
+    with pytest.warns(DeprecationWarning, match="repro.core.solve"):
+        odeint(mlp_field, X0, PARAMS, t1=1.0, n_steps=2)
+    with pytest.warns(DeprecationWarning, match="repro.core.solve"):
+        odeint_with_stats(mlp_field, X0, PARAMS, t1=1.0, n_steps=2)

@@ -15,6 +15,12 @@ jax.config.update("jax_enable_x64", True)
 from repro.core import (AdaptiveConfig, TABLEAUS, get_tableau, odeint,
                         odeint_with_stats)
 
+# This module deliberately exercises the deprecated odeint shims — it doubles
+# as the shim's regression suite (values must match solve() bit-for-bit; see
+# tests/test_api.py for the golden-equivalence checks).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:odeint-style entry point:DeprecationWarning")
+
 ALL_METHODS = sorted(TABLEAUS)
 ADAPTIVE_METHODS = [n for n in ALL_METHODS if TABLEAUS[n].b_err is not None]
 

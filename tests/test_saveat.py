@@ -29,6 +29,10 @@ from repro.core import (AdaptiveConfig, GRAD_MODES, get_tableau, odeint,
 from repro.core.rk import (_time_resolution, rk_solve_adaptive,
                            rk_solve_adaptive_saveat, rk_step)
 
+# Deliberately exercises the deprecated odeint shims (shim regression suite).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:odeint-style entry point:DeprecationWarning")
+
 ALL_MODES = list(GRAD_MODES)
 ADAPTIVE_MODES = ["symplectic", "backprop", "adjoint"]
 

@@ -29,6 +29,10 @@ from repro.kernels import ops, ref
 from repro.kernels.butcher_combine import (butcher_combine_pallas,
                                            butcher_combine_rows_pallas)
 
+# Deliberately exercises the deprecated odeint shim (shim regression suite).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:odeint-style entry point:DeprecationWarning")
+
 ALL_METHODS = sorted(TABLEAUS)
 ADAPTIVE_METHODS = [n for n in ALL_METHODS if TABLEAUS[n].b_err is not None]
 

@@ -21,6 +21,10 @@ jax.config.update("jax_enable_x64", True)
 
 from repro.core import AdaptiveConfig, GRAD_MODES, odeint
 
+# Deliberately exercises the deprecated odeint shim (shim regression suite).
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:odeint-style entry point:DeprecationWarning")
+
 ADAPTIVE_MODES = ["symplectic", "backprop", "adjoint"]
 
 
