@@ -14,6 +14,7 @@ artifact, not just job logs.  CI uploads ``BENCH_*.json`` from the
   bench_physics         -> Table 4 (KdV / Cahn-Hilliard, dopri8)
   bench_combine         -> fused vs unfused stage combination (StageCombiner)
   bench_saveat_compile  -> SaveAt compile time vs observation count
+  bench_batch           -> masked per-lane batching vs lockstep (batch_axis)
   roofline              -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
 
 Usage:
@@ -71,9 +72,9 @@ def main() -> None:
         print("# smoke mode: rot-check sizes, numbers are meaningless",
               flush=True)
 
-    from . import (bench_cnf, bench_combine, bench_orders, bench_physics,
-                   bench_rk_sweep, bench_saveat_compile, bench_steps,
-                   roofline)
+    from . import (bench_batch, bench_cnf, bench_combine, bench_orders,
+                   bench_physics, bench_rk_sweep, bench_saveat_compile,
+                   bench_steps, roofline)
 
     benches = [
         ("bench_tolerance", _tolerance_subprocess),
@@ -84,6 +85,7 @@ def main() -> None:
         ("bench_physics", bench_physics.main),
         ("bench_combine", bench_combine.main),
         ("bench_saveat_compile", bench_saveat_compile.main),
+        ("bench_batch", bench_batch.main),
         ("roofline", roofline.main),
     ]
     only = args[0] if args else None

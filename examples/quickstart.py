@@ -1,9 +1,11 @@
-"""Quickstart: the symplectic adjoint method in 60 lines.
+"""Quickstart: the symplectic adjoint method in ~80 lines.
 
 Trains a tiny neural ODE on a 2-D spiral flow and shows the headline
 property: the symplectic adjoint returns the same gradient as
 backpropagation-through-the-solver (exact), while the classic continuous
-adjoint does not — at a fraction of backprop's memory.
+adjoint does not — at a fraction of backprop's memory.  Then solves a
+heterogeneous-stiffness batch with per-trajectory adaptive step control
+(``solve(..., batch_axis=0)``, docs/batching.md).
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -15,8 +17,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core import (ContinuousAdjoint, DirectBackprop, SymplecticAdjoint,
-                        solve)
+from repro.core import (AdaptiveConfig, ContinuousAdjoint, DirectBackprop,
+                        SymplecticAdjoint, solve)
 
 jax.config.update("jax_enable_x64", True)
 
@@ -67,6 +69,23 @@ def main():
         if step % 50 == 0:
             print(f"step {step:4d}  loss {float(l):.5f}")
     print(f"final loss {float(loss(p, SymplecticAdjoint())):.5f}")
+
+    # --- batch-native adaptive solving -----------------------------------
+    # B independent oscillators, stiffness spread over a decade; axis 0 is
+    # a batch of trajectories, each with its OWN adaptive controller.
+    B = 4 if smoke else 8
+
+    def osc(state, t, _p):
+        x, om = state
+        return (om[..., None] * jnp.stack([x[..., 1], -x[..., 0]], -1),
+                jnp.zeros_like(om))
+
+    x0 = (jnp.tile(jnp.array([1.0, 0.0]), (B, 1)), jnp.logspace(0., 1., B))
+    sol = solve(osc, x0, {}, gradient=DirectBackprop(), batch_axis=0,
+                stepping=AdaptiveConfig(rtol=1e-6, atol=1e-9, max_steps=256))
+    print("batched solve, per-lane accepted steps:",
+          sol.stats["n_steps"].tolist(), "(stiffer lane -> finer grid; "
+          "a lockstep batch would force one shared grid)")
 
 
 if __name__ == "__main__":

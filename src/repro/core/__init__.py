@@ -15,17 +15,25 @@ from .combine import (COMBINE_BACKENDS, StageCombiner, alloc_stages,
 from .api import (GRADIENT_REGISTRY, STEPPING_KINDS, SAVEAT_KINDS,
                   ContinuousAdjoint, DirectBackprop, GradientStrategy,
                   RematSolve, RematStep, SaveAt, Solution, SymplecticAdjoint,
-                  as_gradient, capability_matrix, register_gradient, solve)
+                  as_gradient, batched_capability_matrix, capability_matrix,
+                  register_gradient, solve)
 from .odeint import GRAD_MODES, TS_MODES, odeint, odeint_with_stats
 from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
-                 apply_on_failure, hermite_observe, rk_solve_adaptive,
+                 BatchedAdaptiveSolution, apply_on_failure,
+                 apply_on_failure_lanes, hermite_observe, lane_count,
+                 rk_solve_adaptive, rk_solve_adaptive_batched,
+                 rk_solve_adaptive_batched_saveat_stacked,
                  rk_solve_adaptive_saveat, rk_solve_adaptive_saveat_stacked,
                  rk_solve_fixed, rk_stages, rk_step, tree_scale_add)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
+                         odeint_symplectic_adaptive_batched,
                          odeint_symplectic_saveat,
                          odeint_symplectic_saveat_adaptive,
-                         symplectic_step_adjoint)
-from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
+                         odeint_symplectic_saveat_adaptive_batched,
+                         symplectic_step_adjoint,
+                         symplectic_step_adjoint_lanes)
+from .adjoint import (odeint_adjoint, odeint_adjoint_adaptive,
+                      odeint_adjoint_adaptive_batched)
 from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
 from .tableau import HERMITE_DENSE_W, TABLEAUS, ButcherTableau, get_tableau
 
@@ -33,17 +41,25 @@ __all__ = [
     "solve", "Solution", "SaveAt", "GradientStrategy", "SymplecticAdjoint",
     "DirectBackprop", "RematStep", "RematSolve", "ContinuousAdjoint",
     "register_gradient", "as_gradient", "GRADIENT_REGISTRY",
-    "capability_matrix", "STEPPING_KINDS", "SAVEAT_KINDS",
+    "capability_matrix", "batched_capability_matrix",
+    "STEPPING_KINDS", "SAVEAT_KINDS",
     "odeint", "odeint_with_stats", "GRAD_MODES", "TS_MODES",
-    "AdaptiveConfig", "AdaptiveSolution", "ON_FAILURE_POLICIES",
+    "AdaptiveConfig", "AdaptiveSolution", "BatchedAdaptiveSolution",
+    "ON_FAILURE_POLICIES",
     "COMBINE_BACKENDS", "StageCombiner", "get_combiner", "alloc_stages",
     "set_stage", "stage_prefix", "stage_suffix",
-    "rk_solve_fixed", "rk_solve_adaptive", "rk_solve_adaptive_saveat",
-    "rk_solve_adaptive_saveat_stacked",
+    "rk_solve_fixed", "rk_solve_adaptive", "rk_solve_adaptive_batched",
+    "rk_solve_adaptive_saveat", "rk_solve_adaptive_saveat_stacked",
+    "rk_solve_adaptive_batched_saveat_stacked", "lane_count",
     "rk_step", "rk_stages", "tree_scale_add", "apply_on_failure",
+    "apply_on_failure_lanes",
     "hermite_observe", "odeint_symplectic", "odeint_symplectic_adaptive",
+    "odeint_symplectic_adaptive_batched",
     "odeint_symplectic_saveat", "odeint_symplectic_saveat_adaptive",
-    "symplectic_step_adjoint", "odeint_adjoint", "odeint_adjoint_adaptive",
+    "odeint_symplectic_saveat_adaptive_batched",
+    "symplectic_step_adjoint", "symplectic_step_adjoint_lanes",
+    "odeint_adjoint", "odeint_adjoint_adaptive",
+    "odeint_adjoint_adaptive_batched",
     "odeint_backprop", "odeint_remat_step", "odeint_remat_solve",
     "TABLEAUS", "ButcherTableau", "get_tableau", "HERMITE_DENSE_W",
 ]

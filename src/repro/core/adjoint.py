@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 rk_solve_adaptive, rk_solve_fixed,
+                 apply_on_failure_lanes, lane_count, rk_solve_adaptive,
+                 rk_solve_adaptive_batched, rk_solve_fixed,
                  time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
@@ -109,3 +110,54 @@ def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
 
 
 odeint_adjoint_adaptive.defvjp(_adja_fwd, _adja_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Batch-native adaptive variant: the backward augmented solve ALSO runs under
+# masked per-lane control, so each lane's adjoint is integrated on its own
+# backward grid (a stiff lane cannot perturb its batchmates' backward
+# tolerances).  The augmented state carries a per-lane grad-theta
+# accumulator — leaves (B,) + param shape, i.e. O(B L) backward memory: the
+# price of per-lane backward grids, documented in docs/batching.md.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def odeint_adjoint_adaptive_batched(f: VectorField, tab: ButcherTableau,
+                                    cfg: AdaptiveConfig,
+                                    bwd_cfg: AdaptiveConfig,
+                                    combine_backend: str,
+                                    x0, t0, t1, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+                                    combine_backend)
+    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+
+
+def _adjab_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+                                    combine_backend)
+    x_final = apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                     cfg.on_failure)
+    return x_final, (x_final, t0, t1, params)
+
+
+def _adjab_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
+    xN, t0, t1, params = res
+    B = lane_count(xN)
+    aug = _aug_dynamics(f)
+    gtheta0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros((B,) + jnp.shape(p), jnp.asarray(p).dtype),
+        params)
+    sol = rk_solve_adaptive_batched(aug, tab, (xN, lam_N, gtheta0), t1, t0,
+                                    params, bwd_cfg, combine_backend)
+    # a lane whose backward solve was truncated is a silently wrong
+    # gradient for THAT lane: poison per lane (the lane-summed grad-theta
+    # inherits the poison — one bad lane taints the shared parameter
+    # gradient, which is exactly what a sum of per-lane gradients means).
+    _, lam0, gtheta_lanes = apply_on_failure_lanes(
+        sol.x_final, sol.succeeded, bwd_cfg.on_failure)
+    gtheta = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0),
+                                    gtheta_lanes)
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
+
+
+odeint_adjoint_adaptive_batched.defvjp(_adjab_fwd, _adjab_bwd)

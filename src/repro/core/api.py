@@ -60,6 +60,15 @@ eagerly at trace time.
 when observing) or an ``AdaptiveConfig`` (PI-controlled adaptive stepping,
 ``max_steps`` per segment).
 
+``batch_axis=0`` declares the leading axis of every state leaf a batch of
+INDEPENDENT trajectories: adaptive solves then run masked per-lane step
+control (each lane its own error norm, accept/reject, and accepted grid —
+no cross-lane coupling) in one fused while_loop, ``stats``/``success``
+become per-lane (B,) arrays, and the symplectic/continuous adjoints replay
+each lane's own grid, so batched gradients match a loop of single solves
+to rounding (docs/batching.md; ``batched_capability_matrix()`` declares
+which cells support it).
+
 The legacy ``odeint`` / ``odeint_with_stats`` front-ends survive as thin
 deprecation shims over ``solve`` (core/odeint.py); docs/api.md carries the
 old-kwarg -> new-object migration table.
@@ -73,16 +82,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .adjoint import odeint_adjoint, odeint_adjoint_adaptive
+from .adjoint import (odeint_adjoint, odeint_adjoint_adaptive,
+                      odeint_adjoint_adaptive_batched)
 from .backprop import odeint_backprop, odeint_remat_solve, odeint_remat_step
 from .combine import resolve_backend
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 hermite_observe, rk_solve_adaptive,
+                 apply_on_failure_lanes, hermite_observe, lane_count,
+                 rk_solve_adaptive, rk_solve_adaptive_batched,
+                 rk_solve_adaptive_batched_saveat_stacked,
                  rk_solve_adaptive_saveat_stacked, rk_solve_fixed,
                  segment_starts)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
+                         odeint_symplectic_adaptive_batched,
                          odeint_symplectic_saveat,
-                         odeint_symplectic_saveat_adaptive)
+                         odeint_symplectic_saveat_adaptive,
+                         odeint_symplectic_saveat_adaptive_batched)
 from .tableau import ButcherTableau, get_tableau
 
 Pytree = Any
@@ -168,10 +182,14 @@ class Solution:
     stats       — {"n_steps", "n_fevals", "n_attempts"}: int32 counters of
                   the realized solve.  Exact static counts on fixed grids;
                   the controller's realized counters on adaptive solves.
-                  Never differentiated; dead-code-eliminated under jit when
+                  Scalars for a single trajectory; per-lane (B,) arrays
+                  under ``solve(..., batch_axis=0)``.  Never
+                  differentiated; dead-code-eliminated under jit when
                   unused.
     success     — bool: the solve reached its target time within the
-                  adaptive budgets (always True on fixed grids).
+                  adaptive budgets (always True on fixed grids).  Per-lane
+                  (B,) under ``batch_axis=0`` — one stiff lane failing
+                  does not flag (or poison) its batchmates.
     """
     ys: Pytree
     final_state: Pytree
@@ -239,6 +257,20 @@ class GradientStrategy:
     """
     name: ClassVar[str]
     capabilities: ClassVar[FrozenSet[Tuple[str, str]]]
+    # adaptive cells ALSO legal under ``solve(..., batch_axis=0)`` — i.e.
+    # cells for which the strategy has a masked per-lane batched driver.
+    # Fixed-grid cells never appear here: a fixed grid is state-independent,
+    # so every claimed fixed cell is batchable for free (``batched_cells``).
+    batched_capabilities: ClassVar[FrozenSet[Tuple[str, str]]] = frozenset()
+
+    @classmethod
+    def batched_cells(cls) -> FrozenSet[Tuple[str, str]]:
+        """(stepping, saveat) cells legal with ``batch_axis=0``: every fixed
+        cell the strategy claims (the grid cannot depend on the state, so
+        batch-in-state already IS per-lane exact) plus the declared
+        ``batched_capabilities`` adaptive cells."""
+        fixed = frozenset(c for c in cls.capabilities if c[0] == "fixed")
+        return fixed | cls.batched_capabilities
 
     # -- value hooks --------------------------------------------------------
     def fixed(self, ctx: _Ctx, x0, t0, t1, params):
@@ -315,6 +347,74 @@ class GradientStrategy:
         'dense')."""
         raise NotImplementedError
 
+    # -- batched hooks (masked per-lane adaptive control, batch_axis=0) -----
+    # Stats and success are PER LANE: (B,) int32 / bool arrays.
+    def adaptive_batched(self, ctx: _Ctx, x0, t0, t1, params):
+        raise NotImplementedError
+
+    def adaptive_saveat_batched(self, ctx: _Ctx, x0, t0, ts, params):
+        return _segmented(
+            lambda x, a, b: self.adaptive_batched(ctx, x, a, b, params),
+            x0, t0, ts)
+
+    def adaptive_batched_stats(self, ctx: _Ctx, x0, t0, t1, params):
+        """Per-lane counters of the realized batched solve (stop_gradient
+        controller replay, exactly like ``adaptive_stats``)."""
+        sol = rk_solve_adaptive_batched(
+            ctx.f, ctx.tab, jax.lax.stop_gradient(x0), t0, t1,
+            jax.lax.stop_gradient(params), ctx.adaptive, ctx.backend)
+        return ({"n_steps": sol.n_accepted, "n_fevals": sol.n_fevals,
+                 "n_attempts": sol.n_attempts}, sol.succeeded)
+
+    def adaptive_saveat_batched_stats(self, ctx: _Ctx, x0, t0, ts, params):
+        """Restart-per-segment batched replay, matching the step sequence
+        the default ``adaptive_saveat_batched`` (generic segmentation over
+        ``adaptive_batched``) realizes.  Strategies whose batched SaveAt
+        drivers thread the per-lane controller step across boundaries
+        override with the threaded stacked replay."""
+        cfg = ctx.adaptive
+        x0 = jax.lax.stop_gradient(x0)
+        params = jax.lax.stop_gradient(params)
+
+        def body(x, seg):
+            a, b = seg
+            sol = rk_solve_adaptive_batched(ctx.f, ctx.tab, x, a, b, params,
+                                            cfg, ctx.backend)
+            x = apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                       cfg.on_failure)
+            return x, (sol.n_accepted, sol.n_fevals, sol.n_attempts,
+                       sol.succeeded)
+
+        _, (na, nf, nt, ok) = jax.lax.scan(body, x0,
+                                           (segment_starts(t0, ts), ts))
+        return ({"n_steps": jnp.sum(na, axis=0),
+                 "n_fevals": jnp.sum(nf, axis=0),
+                 "n_attempts": jnp.sum(nt, axis=0)}, jnp.all(ok, axis=0))
+
+    def adaptive_batched_with_stats(self, ctx: _Ctx, x0, t0, t1, params):
+        ys = self.adaptive_batched(ctx, x0, t0, t1, params)
+        stats, success = self.adaptive_batched_stats(ctx, x0, t0, t1, params)
+        return ys, stats, success
+
+    def adaptive_saveat_batched_with_stats(self, ctx: _Ctx, x0, t0, ts,
+                                           params):
+        ys = self.adaptive_saveat_batched(ctx, x0, t0, ts, params)
+        stats, success = self.adaptive_saveat_batched_stats(
+            ctx, x0, t0, ts, params)
+        return ys, stats, success
+
+
+def _threaded_saveat_batched_stats(ctx: _Ctx, x0, t0, ts, params):
+    """Per-lane stats replay for batched SaveAt drivers that thread each
+    lane's controller step across observation boundaries."""
+    _, sols = rk_solve_adaptive_batched_saveat_stacked(
+        ctx.f, ctx.tab, jax.lax.stop_gradient(x0), t0, ts,
+        jax.lax.stop_gradient(params), ctx.adaptive, ctx.backend)
+    return ({"n_steps": jnp.sum(sols.n_accepted, axis=0),
+             "n_fevals": jnp.sum(sols.n_fevals, axis=0),
+             "n_attempts": jnp.sum(sols.n_attempts, axis=0)},
+            jnp.all(sols.succeeded, axis=0))
+
 
 def _threaded_saveat_stats(ctx: _Ctx, x0, t0, ts, params):
     """Stats replay for SaveAt drivers that THREAD the controller step
@@ -368,6 +468,8 @@ class SymplecticAdjoint(GradientStrategy):
     name: ClassVar[str] = "symplectic"
     capabilities: ClassVar[FrozenSet] = frozenset(
         {_FIXED_T1, _FIXED_TS, _ADAPT_T1, _ADAPT_TS})
+    batched_capabilities: ClassVar[FrozenSet] = frozenset(
+        {_ADAPT_T1, _ADAPT_TS})
 
     def fixed(self, ctx, x0, t0, t1, params):
         return odeint_symplectic(ctx.f, ctx.tab, ctx.n_steps, ctx.backend,
@@ -388,6 +490,18 @@ class SymplecticAdjoint(GradientStrategy):
     def adaptive_saveat_stats(self, ctx, x0, t0, ts, params):
         return _threaded_saveat_stats(ctx, x0, t0, ts, params)
 
+    # batched: exact per-lane gradients replaying each lane's own grid
+    def adaptive_batched(self, ctx, x0, t0, t1, params):
+        return odeint_symplectic_adaptive_batched(
+            ctx.f, ctx.tab, ctx.adaptive, ctx.backend, x0, t0, t1, params)
+
+    def adaptive_saveat_batched(self, ctx, x0, t0, ts, params):
+        return odeint_symplectic_saveat_adaptive_batched(
+            ctx.f, ctx.tab, ctx.adaptive, ctx.backend, x0, t0, ts, params)
+
+    def adaptive_saveat_batched_stats(self, ctx, x0, t0, ts, params):
+        return _threaded_saveat_batched_stats(ctx, x0, t0, ts, params)
+
 
 @register_gradient
 @dataclasses.dataclass(frozen=True)
@@ -398,6 +512,8 @@ class DirectBackprop(GradientStrategy):
     name: ClassVar[str] = "backprop"
     capabilities: ClassVar[FrozenSet] = frozenset(
         {_FIXED_T1, _FIXED_TS, _ADAPT_T1, _ADAPT_TS, _ADAPT_DENSE})
+    batched_capabilities: ClassVar[FrozenSet] = frozenset(
+        {_ADAPT_T1, _ADAPT_TS})
 
     def fixed(self, ctx, x0, t0, t1, params):
         return odeint_backprop(ctx.f, ctx.tab, ctx.n_steps, x0, t0, t1,
@@ -440,6 +556,37 @@ class DirectBackprop(GradientStrategy):
     # self-consistent for subclassers and direct callers.
     def adaptive_saveat_stats(self, ctx, x0, t0, ts, params):
         return _threaded_saveat_stats(ctx, x0, t0, ts, params)
+
+    # batched: the value drivers ARE the per-lane controllers — one run.
+    def adaptive_batched(self, ctx, x0, t0, t1, params):
+        sol = rk_solve_adaptive_batched(ctx.f, ctx.tab, x0, t0, t1, params,
+                                        ctx.adaptive, ctx.backend)
+        return apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                      ctx.adaptive.on_failure)
+
+    def adaptive_batched_with_stats(self, ctx, x0, t0, t1, params):
+        sol = rk_solve_adaptive_batched(ctx.f, ctx.tab, x0, t0, t1, params,
+                                        ctx.adaptive, ctx.backend)
+        ys = apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                    ctx.adaptive.on_failure)
+        return ys, {"n_steps": sol.n_accepted, "n_fevals": sol.n_fevals,
+                    "n_attempts": sol.n_attempts}, sol.succeeded
+
+    def adaptive_saveat_batched(self, ctx, x0, t0, ts, params):
+        obs, _ = rk_solve_adaptive_batched_saveat_stacked(
+            ctx.f, ctx.tab, x0, t0, ts, params, ctx.adaptive, ctx.backend)
+        return obs
+
+    def adaptive_saveat_batched_with_stats(self, ctx, x0, t0, ts, params):
+        obs, sols = rk_solve_adaptive_batched_saveat_stacked(
+            ctx.f, ctx.tab, x0, t0, ts, params, ctx.adaptive, ctx.backend)
+        return obs, {"n_steps": jnp.sum(sols.n_accepted, axis=0),
+                     "n_fevals": jnp.sum(sols.n_fevals, axis=0),
+                     "n_attempts": jnp.sum(sols.n_attempts, axis=0)}, \
+            jnp.all(sols.succeeded, axis=0)
+
+    def adaptive_saveat_batched_stats(self, ctx, x0, t0, ts, params):
+        return _threaded_saveat_batched_stats(ctx, x0, t0, ts, params)
 
     def dense_saveat_with_stats(self, ctx, x0, t0, ts, params):
         # ONE unsegmented solve + Hermite interpolation: value and stats
@@ -497,6 +644,8 @@ class ContinuousAdjoint(GradientStrategy):
     name: ClassVar[str] = "adjoint"
     capabilities: ClassVar[FrozenSet] = frozenset(
         {_FIXED_T1, _FIXED_TS, _ADAPT_T1, _ADAPT_TS})
+    batched_capabilities: ClassVar[FrozenSet] = frozenset(
+        {_ADAPT_T1, _ADAPT_TS})
 
     steps_multiplier: int = 1
     bwd_adaptive: Optional[AdaptiveConfig] = None
@@ -523,8 +672,18 @@ class ContinuousAdjoint(GradientStrategy):
             ctx.f, ctx.tab, ctx.adaptive,
             self.bwd_adaptive or ctx.adaptive, ctx.backend,
             x0, t0, t1, params)
-    # SaveAt value AND stats both come from the base class: generic
-    # restart-per-segment segmentation and the matching restart replay.
+
+    def adaptive_batched(self, ctx, x0, t0, t1, params):
+        # per-lane forward AND backward grids; the backward augmented state
+        # carries a per-lane grad-theta accumulator — O(B L) memory
+        # (core/adjoint.py, docs/batching.md).
+        return odeint_adjoint_adaptive_batched(
+            ctx.f, ctx.tab, ctx.adaptive,
+            self.bwd_adaptive or ctx.adaptive, ctx.backend,
+            x0, t0, t1, params)
+    # SaveAt value AND stats both come from the base class (batched and
+    # not): generic restart-per-segment segmentation + the matching
+    # restart replay.
 
 
 # ---------------------------------------------------------------------------
@@ -533,36 +692,58 @@ class ContinuousAdjoint(GradientStrategy):
 
 def capability_matrix() -> Dict[str, Dict[Tuple[str, str], bool]]:
     """The full declarative (gradient x stepping x saveat) legality table,
-    assembled from the registered strategies (docs/api.md renders it)."""
+    assembled from the registered strategies (docs/api.md renders it via
+    tools/gen_capability_table.py)."""
     return {name: {(sk, vk): (sk, vk) in cls.capabilities
                    for sk in STEPPING_KINDS for vk in SAVEAT_KINDS}
             for name, cls in sorted(GRADIENT_REGISTRY.items())}
 
 
+def batched_capability_matrix() -> Dict[str, Dict[Tuple[str, str], bool]]:
+    """Same table for ``solve(..., batch_axis=0)``: which cells each
+    strategy supports with masked per-lane step control (every fixed cell a
+    strategy claims, plus its declared batched adaptive cells)."""
+    return {name: {(sk, vk): (sk, vk) in cls.batched_cells()
+                   for sk in STEPPING_KINDS for vk in SAVEAT_KINDS}
+            for name, cls in sorted(GRADIENT_REGISTRY.items())}
+
+
 def _check_capability(gradient: GradientStrategy, stepping_kind: str,
-                      saveat_kind: str) -> None:
-    if (stepping_kind, saveat_kind) in type(gradient).capabilities:
+                      saveat_kind: str, batched: bool = False) -> None:
+    cells = (type(gradient).batched_cells() if batched
+             else type(gradient).capabilities)
+    if (stepping_kind, saveat_kind) in cells:
         return
     name = type(gradient).name
-    legal = ", ".join(f"{sk}+{vk}"
-                      for sk, vk in sorted(type(gradient).capabilities))
+    legal = ", ".join(f"{sk}+{vk}" for sk, vk in sorted(cells))
+    ctx = " with batch_axis=0" if batched else ""
     raise ValueError(
         f"gradient {name!r} does not support stepping={stepping_kind!r} "
-        f"with saveat={saveat_kind!r}; legal (stepping+saveat) combinations "
-        f"for {name!r}: {legal}.  See the capability matrix in docs/api.md")
+        f"with saveat={saveat_kind!r}{ctx}; legal (stepping+saveat) "
+        f"combinations for {name!r}{ctx}: {legal}.  See the capability "
+        "matrix in docs/api.md")
 
 
 # ---------------------------------------------------------------------------
 # solve
 # ---------------------------------------------------------------------------
 
-def _fixed_stats(tab: ButcherTableau, n_steps: int, n_segments: int):
+def _fixed_stats(tab: ButcherTableau, n_steps: int, n_segments: int,
+                 lanes: Optional[int] = None):
     """Fixed-grid stats are exact static counts: the drivers skip the
-    embedded error estimate, so the cost is exactly s f-evals per step."""
-    total = jnp.int32(n_segments * n_steps)
-    return ({"n_steps": total,
-             "n_fevals": jnp.int32(n_segments * n_steps * tab.s),
-             "n_attempts": total}, jnp.asarray(True))
+    embedded error estimate, so the cost is exactly s f-evals per step.
+    With ``lanes`` (batch_axis=0) the counts broadcast per lane — every
+    lane takes the same deterministic grid."""
+    total = n_segments * n_steps
+    fevals = total * tab.s
+    if lanes is None:
+        return ({"n_steps": jnp.int32(total),
+                 "n_fevals": jnp.int32(fevals),
+                 "n_attempts": jnp.int32(total)}, jnp.asarray(True))
+    return ({"n_steps": jnp.full((lanes,), total, jnp.int32),
+             "n_fevals": jnp.full((lanes,), fevals, jnp.int32),
+             "n_attempts": jnp.full((lanes,), total, jnp.int32)},
+            jnp.ones((lanes,), bool))
 
 
 def solve(f: VectorField, x0, params, *,
@@ -571,26 +752,45 @@ def solve(f: VectorField, x0, params, *,
           gradient: Union[str, GradientStrategy, None] = None,
           stepping: Union[int, AdaptiveConfig] = 16,
           backend: str = "auto",
-          t0=0.0) -> Solution:
+          t0=0.0,
+          batch_axis: Optional[int] = None) -> Solution:
     """Integrate ``dx/dt = f(x, t, params)`` and return a ``Solution``.
 
-    f        — vector field over arbitrary pytrees; times are not
-               differentiated (zero cotangents), matching the paper's
-               fixed-T setting.
-    saveat   — observation scheme (default ``SaveAt(t1=1.0)``).
-    method   — tableau name or a ``ButcherTableau``.
-    gradient — a ``GradientStrategy`` (or registered name; default
-               ``SymplecticAdjoint()``).
-    stepping — int N (fixed grid; N steps per observation segment) or an
-               ``AdaptiveConfig`` (``max_steps`` per segment).
-    backend  — stage-combine dispatch: auto | jnp | pallas
-               (core/combine.py).
-    t0       — start time (keyword; default 0).
+    f          — vector field over arbitrary pytrees; times are not
+                 differentiated (zero cotangents), matching the paper's
+                 fixed-T setting.
+    saveat     — observation scheme (default ``SaveAt(t1=1.0)``).
+    method     — tableau name or a ``ButcherTableau``.
+    gradient   — a ``GradientStrategy`` (or registered name; default
+                 ``SymplecticAdjoint()``).
+    stepping   — int N (fixed grid; N steps per observation segment) or an
+                 ``AdaptiveConfig`` (``max_steps`` per segment).
+    backend    — stage-combine dispatch: auto | jnp | pallas
+                 (core/combine.py).
+    t0         — start time (keyword; default 0).
+    batch_axis — None (default): ONE trajectory; a leading batch axis in
+                 the state is part of that single trajectory's state, so
+                 an adaptive controller pools its error norm over the
+                 whole batch (lockstep).  0: the leading axis of every
+                 state leaf indexes B INDEPENDENT trajectories — adaptive
+                 solves run masked per-lane step control (each lane its
+                 own accepted grid, error norm, and accept/reject; exact
+                 per-lane gradients under the symplectic adjoint), and
+                 ``stats``/``success`` become per-lane (B,) arrays.  Times
+                 (``t0``, ``saveat``) stay shared.  Only axis 0 is
+                 supported.  See docs/batching.md.
     """
     tab = get_tableau(method) if isinstance(method, str) else method
     resolve_backend(backend)  # eager validation, single source
     gradient = as_gradient("symplectic" if gradient is None else gradient)
     saveat = SaveAt(t1=1.0) if saveat is None else saveat
+    if batch_axis is not None and batch_axis != 0:
+        raise ValueError(
+            f"batch_axis={batch_axis!r}: only the leading axis "
+            "(batch_axis=0) is supported — move the trajectory axis of "
+            "every state leaf to axis 0")
+    batched = batch_axis is not None
+    lanes = lane_count(x0) if batched else None
 
     if isinstance(stepping, AdaptiveConfig):
         stepping_kind, n_steps, adaptive = "adaptive", None, stepping
@@ -605,15 +805,20 @@ def solve(f: VectorField, x0, params, *,
             "stepping must be an int (fixed-grid step count) or an "
             f"AdaptiveConfig; got {type(stepping).__name__}")
 
-    _check_capability(gradient, stepping_kind, saveat.kind)
+    _check_capability(gradient, stepping_kind, saveat.kind, batched)
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     ctx = _Ctx(f, tab, n_steps, adaptive, backend)
 
     if saveat.kind == "t1":
         t1 = jnp.asarray(saveat.t1, dtype=t0.dtype)
         if stepping_kind == "fixed":
+            # the fixed grid is state-independent: the plain driver IS the
+            # per-lane solve, only the stats shapes change.
             ys = gradient.fixed(ctx, x0, t0, t1, params)
-            stats, success = _fixed_stats(tab, n_steps, 1)
+            stats, success = _fixed_stats(tab, n_steps, 1, lanes)
+        elif batched:
+            ys, stats, success = gradient.adaptive_batched_with_stats(
+                ctx, x0, t0, t1, params)
         else:
             ys, stats, success = gradient.adaptive_with_stats(
                 ctx, x0, t0, t1, params)
@@ -623,7 +828,10 @@ def solve(f: VectorField, x0, params, *,
     if saveat.kind == "ts":
         if stepping_kind == "fixed":
             ys = gradient.fixed_saveat(ctx, x0, t0, ts, params)
-            stats, success = _fixed_stats(tab, n_steps, ts.shape[0])
+            stats, success = _fixed_stats(tab, n_steps, ts.shape[0], lanes)
+        elif batched:
+            ys, stats, success = gradient.adaptive_saveat_batched_with_stats(
+                ctx, x0, t0, ts, params)
         else:
             ys, stats, success = gradient.adaptive_saveat_with_stats(
                 ctx, x0, t0, ts, params)

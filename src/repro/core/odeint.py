@@ -73,7 +73,8 @@ def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
            adaptive: Optional[AdaptiveConfig] = None,
            adjoint_adaptive_cfg: Optional[AdaptiveConfig] = None,
            adjoint_steps_multiplier: int = 1,
-           combine_backend: str = "auto"):
+           combine_backend: str = "auto",
+           batch_axis: Optional[int] = None):
     """DEPRECATED compat shim: translate old kwargs onto ``solve``."""
     _warn("odeint")
     if ts_mode not in TS_MODES:
@@ -92,7 +93,7 @@ def odeint(f: VectorField, x0, params, *, t0=0.0, t1=None,
                 gradient=_gradient_of(grad_mode, adjoint_steps_multiplier,
                                       adjoint_adaptive_cfg),
                 stepping=n_steps if adaptive is None else adaptive,
-                backend=combine_backend, t0=t0)
+                backend=combine_backend, t0=t0, batch_axis=batch_axis)
     return sol.ys
 
 
@@ -101,7 +102,8 @@ def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=None,
                       method: Union[str, ButcherTableau] = "dopri5",
                       n_steps: int = 16,
                       adaptive: Optional[AdaptiveConfig] = None,
-                      combine_backend: str = "auto"):
+                      combine_backend: str = "auto",
+                      batch_axis: Optional[int] = None):
     """DEPRECATED compat shim: non-differentiable solve + stats dict.
 
     Translates onto ``solve`` with ``DirectBackprop`` and reshapes
@@ -124,7 +126,7 @@ def odeint_with_stats(f: VectorField, x0, params, *, t0=0.0, t1=None,
         stepping = dataclasses.replace(adaptive, on_failure="ignore")
     sol = solve(f, x0, params, saveat=saveat, method=method,
                 gradient=DirectBackprop(), stepping=stepping,
-                backend=combine_backend, t0=t0)
+                backend=combine_backend, t0=t0, batch_axis=batch_axis)
     if adaptive is None:
         stats = {"n_steps": sol.stats["n_steps"],
                  "n_fevals": sol.stats["n_fevals"]}

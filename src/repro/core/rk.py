@@ -251,8 +251,14 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
 
     def cond(state):
         (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
+        # non-finite h means the solve is already dead (a NaN state or field
+        # NaNs the error norm, the rejection then NaNs the h carry): bail
+        # instead of burning max_attempts identical doomed trials — e.g.
+        # when a later SaveAt segment starts from a poisoned on_failure
+        # state.  Exiting short of t1 leaves succeeded=False as usual.
         return (direction * (t1 - t) > t_res) \
-            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts)
+            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts) \
+            & jnp.isfinite(h)
 
     def body(state):
         (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
@@ -311,6 +317,21 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
     return AdaptiveSolution(x, xs, ts, hs, n_acc, fe, succeeded, h, n_try)
 
 
+def _error_norm_lanes(err, x, x_next, rtol, atol):
+    """Per-lane error norms for lane-batched states (lane axis 0 per leaf).
+
+    This is ``jax.vmap`` of ``_error_norm`` itself, NOT a reimplementation:
+    each lane's norm applies the identical per-leaf elementwise scale
+    ``atol + rtol * max(|x|, |x_next|)`` and the identical element-count
+    weighting across mixed-magnitude leaves as a single-trajectory solve of
+    that lane — so masked per-lane step control accepts exactly the steps a
+    loop of single solves would (tests/test_batch.py pins this for
+    mixed-magnitude pytree states).  Returns shape (B,).
+    """
+    return jax.vmap(
+        lambda e, a, b: _error_norm(e, a, b, rtol, atol))(err, x, x_next)
+
+
 def _raise_on_failure_cb(ok):
     if not bool(ok):
         raise RuntimeError(
@@ -318,21 +339,229 @@ def _raise_on_failure_cb(ok):
             "without reaching t1 (AdaptiveConfig(on_failure='raise'))")
 
 
+def lane_bcast(v, leaf):
+    """Broadcast a per-lane vector (B,) against a lane-batched leaf (B, ...).
+
+    Also the degenerate scalar case: a () ``v`` reshapes to all-singleton
+    dims, so one code path serves batched and unbatched policies."""
+    return jnp.reshape(v, jnp.shape(v) + (1,) * (jnp.ndim(leaf) - 1))
+
+
 def apply_on_failure(x_final: Pytree, succeeded, on_failure: str) -> Pytree:
-    """Apply an AdaptiveConfig.on_failure policy to a solver result."""
+    """Apply an AdaptiveConfig.on_failure policy to a solver result.
+
+    ``succeeded`` may be a scalar (one trajectory) or a per-lane (B,)
+    vector (``batch_axis=0`` — lane axis 0 of every leaf): "nan" poisons
+    exactly the failed trajectories, "raise" raises when any failed.
+    """
     if on_failure == "ignore":
         return x_final
     if on_failure == "raise":
-        jax.debug.callback(_raise_on_failure_cb, succeeded)
+        jax.debug.callback(_raise_on_failure_cb, jnp.all(succeeded))
         return x_final
     assert on_failure == "nan", on_failure
 
     def poison(l):
         if not jnp.issubdtype(l.dtype, jnp.inexact):
             return l
-        return jnp.where(succeeded, l, jnp.full_like(l, jnp.nan))
+        return jnp.where(lane_bcast(succeeded, l), l,
+                         jnp.full_like(l, jnp.nan))
 
     return jax.tree_util.tree_map(poison, x_final)
+
+
+def lane_count(x0: Pytree) -> int:
+    """Lane count B of a lane-batched state: every leaf must carry the same
+    leading lane axis (``solve(..., batch_axis=0)``)."""
+    leaves = jax.tree_util.tree_leaves(x0)
+    if not leaves:
+        raise ValueError("batched solve needs a non-empty state pytree")
+    sizes = set()
+    for l in leaves:
+        if jnp.ndim(l) < 1:
+            raise ValueError(
+                "batch_axis=0 requires every state leaf to carry a leading "
+                f"lane axis; got a rank-0 leaf {l!r}")
+        sizes.add(jnp.shape(l)[0])
+    if len(sizes) != 1:
+        raise ValueError(
+            "batch_axis=0 requires every state leaf to share the same "
+            f"leading lane-axis size; got sizes {sorted(sizes)}")
+    return sizes.pop()
+
+
+# Named alias for the per-lane reading at batched call sites; the policy
+# logic lives once in apply_on_failure (lane_bcast handles both ranks).
+apply_on_failure_lanes = apply_on_failure
+
+
+# ---------------------------------------------------------------------------
+# Batch-native adaptive stepping: one while_loop, masked per-lane control.
+# ---------------------------------------------------------------------------
+
+class BatchedAdaptiveSolution(NamedTuple):
+    """Per-lane results of a batch-native adaptive solve (lane count B).
+
+    The checkpoint buffers keep the step axis LEADING — ``xs`` leaves are
+    (max_steps, B, ...), ``ts``/``hs`` are (max_steps, B) — so the
+    symplectic backward pass scans step rows exactly like the unbatched
+    driver, masking each lane by its own ``n_accepted``.
+    """
+    x_final: Pytree          # per-lane final states (lane axis 0)
+    xs: Pytree               # (max_steps, B, ...) accepted checkpoints
+    ts: jnp.ndarray          # (max_steps, B)
+    hs: jnp.ndarray          # (max_steps, B)
+    n_accepted: jnp.ndarray  # (B,) int32
+    n_fevals: jnp.ndarray    # (B,) int32: per-lane f evaluations
+    succeeded: jnp.ndarray   # (B,) bool: lane reached t1 within budgets
+    h_final: jnp.ndarray     # (B,) unclamped controller step at lane exit
+    n_attempts: jnp.ndarray  # (B,) int32: per-lane trial steps (acc + rej)
+
+
+def rk_solve_adaptive_batched(f: VectorField, tab: ButcherTableau, x0,
+                              t0, t1, params, cfg: AdaptiveConfig,
+                              combine_backend: str = "auto",
+                              h0=None) -> BatchedAdaptiveSolution:
+    """Adaptive solve of B independent trajectories in ONE while_loop.
+
+    ``x0`` is lane-batched (lane axis 0 of every leaf).  Each lane carries
+    its own ``(t, h, n_accepted, n_attempts)`` controller state, its own
+    error norm (``_error_norm_lanes``: the single-trajectory norm per lane,
+    never pooled across the batch), and its own accept/reject decision —
+    finished and rejected lanes are masked on commit, so no lane's
+    stiffness can perturb another lane's accepted grid.  The loop runs
+    until every lane lands (or exhausts its budgets), and each trial step
+    evaluates ``f`` ONCE over the full batch (the stage combines stay fused
+    through the StageCombiner under ``vmap``), so the hot path keeps its
+    batched shape; iterations where some lanes are already done spend
+    wasted lane-slots, which is the price of the fused evaluation
+    (docs/batching.md quantifies the trade against lockstep batch-in-state
+    solving).
+
+    Every controller rule matches ``rk_solve_adaptive`` per lane — the
+    unclamped-h carry for landing steps, the dtype-aware termination
+    threshold, the PI factor — so lane b of the result is the
+    single-trajectory solve of lane b to rounding (tests/test_batch.py).
+    ``t0``/``t1``/``h0`` may be scalars (shared) or (B,) per-lane arrays.
+    """
+    if tab.b_err is None:
+        raise ValueError(f"tableau {tab.name} has no embedded error estimate")
+    B = lane_count(x0)
+    dtype = jnp.result_type(float)
+    t0 = jnp.broadcast_to(jnp.asarray(t0, dtype=dtype), (B,))
+    t1 = jnp.broadcast_to(jnp.asarray(t1, dtype=dtype), (B,))
+    direction = jnp.sign(t1 - t0)
+    t_res = _time_resolution(t0, t1, dtype)
+    err_exp = -1.0 / (tab.err_order + 1.0)
+    combiner = get_combiner(tab, combine_backend)
+
+    step_lanes = jax.vmap(
+        lambda x_l, t_l, h_l: rk_step(f, tab, x_l, t_l, h_l, params,
+                                      combiner, with_error=True))
+
+    zeros_like_buf = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((cfg.max_steps,) + l.shape, l.dtype), x0)
+    ts_buf = jnp.zeros((cfg.max_steps, B), dtype)
+    hs_buf = jnp.zeros((cfg.max_steps, B), dtype)
+
+    def _commit_lane(col, val, idx, do):
+        # col: ONE lane's (max_steps, ...) buffer column.  Touch only row
+        # idx (read-select-write), so a trial step costs O(state) per lane,
+        # not an O(max_steps * state) whole-buffer select.
+        cur = jax.lax.dynamic_index_in_dim(col, idx, 0, keepdims=False)
+        new = jnp.where(do, val.astype(col.dtype), cur)
+        return jax.lax.dynamic_update_index_in_dim(col, new, idx, 0)
+
+    commit = jax.vmap(_commit_lane, in_axes=(1, 0, 0, 0), out_axes=1)
+
+    def lanes_active(t, n_acc, n_try, h):
+        # the isfinite(h) bail mirrors the single driver: a lane whose
+        # state went NaN (e.g. poisoned by on_failure in an earlier SaveAt
+        # segment) NaNs its h carry on the first rejected trial and drops
+        # out of the batch one iteration later, instead of pinning every
+        # healthy lane behind max_attempts doomed full-batch steps.
+        return (direction * (t1 - t) > t_res) \
+            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts) \
+            & jnp.isfinite(h)
+
+    def cond(state):
+        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
+        return jnp.any(lanes_active(t, n_acc, n_try, h))
+
+    def body(state):
+        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
+        active = lanes_active(t, n_acc, n_try, h)
+        # per-lane trial clamp; the carried h stays unclamped exactly as in
+        # rk_solve_adaptive (accepted clamped landings keep h, rejected
+        # ones retry from h * factor).
+        clamped = jnp.abs(h) > jnp.abs(t1 - t)
+        h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
+        x_next, err = step_lanes(x, t, h_eff)
+        enorm = _error_norm_lanes(err, x, x_next, cfg.rtol, cfg.atol)
+        accept = enorm <= 1.0
+        factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
+                                                 err_exp),
+                          cfg.min_factor, cfg.max_factor)
+        h_new = jnp.where(accept & clamped, h, h * factor)
+        h = jnp.where(active, h_new, h)      # done lanes freeze their carry
+        do = active & accept
+        xs = jax.tree_util.tree_map(
+            lambda buf, val: commit(buf, val, n_acc, do), xs, x)
+        ts = commit(ts, t, n_acc, do)
+        hs = commit(hs, h_eff, n_acc, do)
+        t = jnp.where(do, t + h_eff, t)
+        x = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(lane_bcast(do, a), b, a), x, x_next)
+        n_acc = n_acc + do.astype(jnp.int32)
+        n_try = n_try + active.astype(jnp.int32)
+        fevals = tab.s + (1 if tab.err_uses_fsal else 0)
+        fe = fe + active.astype(jnp.int32) * fevals
+        return (t, x, h, n_acc, n_try, xs, ts, hs, fe)
+
+    h0_abs = jnp.abs(jnp.broadcast_to(
+        jnp.asarray(cfg.initial_step if h0 is None else h0, dtype), (B,)))
+    h_init = direction * jnp.where(h0_abs > 0, h0_abs,
+                                   jnp.asarray(cfg.initial_step, dtype))
+    lane_i32 = jnp.zeros((B,), jnp.int32)
+    state0 = (t0, x0, h_init, lane_i32, lane_i32,
+              zeros_like_buf, ts_buf, hs_buf, lane_i32)
+    (t, x, h, n_acc, n_try, xs, ts, hs, fe) = jax.lax.while_loop(
+        cond, body, state0)
+    succeeded = jnp.logical_not(direction * (t1 - t) > t_res)
+    return BatchedAdaptiveSolution(x, xs, ts, hs, n_acc, fe, succeeded,
+                                   h, n_try)
+
+
+def rk_solve_adaptive_batched_saveat_stacked(
+        f: VectorField, tab: ButcherTableau, x0, t0, ts: jnp.ndarray,
+        params, cfg: AdaptiveConfig, combine_backend: str = "auto"):
+    """Batched analogue of ``rk_solve_adaptive_saveat_stacked``: one scanned
+    segment chain, per-lane controller state ``(x, h_final)`` threading
+    across every observation boundary (each lane's landing step stays
+    unclamped in ITS carry).  Observation times are shared across lanes.
+    A lane whose segment fails is poisoned per ``cfg.on_failure`` without
+    touching its batchmates, and the poison propagates to that lane's later
+    observations.  Returns (obs, sols) with a leading len(ts) segment axis
+    on every ``BatchedAdaptiveSolution`` field.
+    """
+    dtype = jnp.result_type(float)
+    ts = jnp.asarray(ts, dtype)
+    B = lane_count(x0)
+    t_starts = segment_starts(t0, ts)
+
+    def body(carry, seg):
+        x, h = carry
+        a, b = seg
+        sol = rk_solve_adaptive_batched(f, tab, x, a, b, params, cfg,
+                                        combine_backend, h0=h)
+        x = apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                   cfg.on_failure)
+        sol = sol._replace(x_final=x)
+        return (x, sol.h_final), sol
+
+    _, sols = jax.lax.scan(body, (x0, jnp.zeros((B,), dtype)),
+                           (t_starts, ts))
+    return sols.x_final, sols
 
 
 # ---------------------------------------------------------------------------

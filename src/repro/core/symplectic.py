@@ -44,9 +44,11 @@ import jax.numpy as jnp
 
 from .combine import StageCombiner, alloc_stages, get_combiner, set_stage
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
-                 rk_solve_adaptive, rk_solve_adaptive_saveat_stacked,
-                 rk_solve_fixed, rk_stages, segment_starts,
-                 time_zero_cotangent as _time_zero)
+                 apply_on_failure_lanes, lane_bcast, rk_solve_adaptive,
+                 rk_solve_adaptive_batched,
+                 rk_solve_adaptive_batched_saveat_stacked,
+                 rk_solve_adaptive_saveat_stacked, rk_solve_fixed, rk_stages,
+                 segment_starts, time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -350,3 +352,202 @@ def _syma_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
 
 
 odeint_symplectic_saveat_adaptive.defvjp(_syma_saveat_fwd, _syma_saveat_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Batch-native adaptive drivers: per-lane accepted grids, exact per lane.
+#
+# The forward pass is the masked batch-native driver
+# (rk_solve_adaptive_batched): each lane realizes ITS OWN accepted step
+# sequence.  That sequence is the gradient-defining object of the symplectic
+# adjoint, so the backward pass must replay each lane's own grid — the
+# reverse scan walks the shared (max_steps, B) checkpoint rows, runs one
+# lane-vmapped Algorithm-2 step per row, and masks each lane by its own
+# n_accepted: a lane with fewer accepted steps simply carries its lambda
+# unchanged through the rows beyond its count.  Theorem 2 then applies per
+# lane, so the batched gradient equals the sum of per-lane single-solve
+# gradients to rounding (tests/test_batch.py pins it against a Python loop
+# of single solves).
+# ---------------------------------------------------------------------------
+
+def symplectic_step_adjoint_lanes(f: VectorField, tab: ButcherTableau,
+                                  x_n, t_n, h_n, params, lam_next,
+                                  combiner: Optional[StageCombiner] = None):
+    """One backward Algorithm-2 step for a batch of lanes at once.
+
+    ``x_n``/``lam_next`` are lane-batched (lane axis 0), ``t_n``/``h_n``
+    are (B,).  This is the single-lane ``symplectic_step_adjoint`` with the
+    per-lane-scalar pieces (stage recomputation, the Eq. (7) Lambda rows,
+    one VJP per stage) run under ``jax.vmap`` — NOT a vmap of the whole
+    step: ``lax.optimization_barrier`` has no batching rule, so the
+    scheduling barrier is applied directly to the lane-batched stage state
+    between the vmapped pieces.  The memory discipline is unchanged: one
+    stage's (batched) VJP residuals are live at a time.
+
+    Returns (lambda_n, grad_theta_step) with grad_theta_step PER LANE —
+    leaves (B,) + param shape — so the caller can mask invalid lanes
+    before reducing over the batch.
+    """
+    combiner = combiner or get_combiner(tab)
+    s = tab.s
+    b, c = tab.b, tab.c
+    # --- Alg.2 lines 3-7: recompute stages from the per-lane checkpoints --
+    Xs, _K = jax.vmap(
+        lambda x_l, t_l, h_l: rk_stages(f, tab, x_l, t_l, h_l, params,
+                                        combiner))(x_n, t_n, h_n)
+    # the stacked adjoint-slope buffer keeps its stage axis LEADING, so the
+    # lane axis of every leaf sits at axis 1 (vmap in_axes=1 below).
+    L = alloc_stages(s, lam_next)
+    lambda_stage_lanes = [
+        jax.vmap(lambda lam_l, L_l, h_l, i=i: combiner.lambda_stage(
+            lam_l, L_l, h_l, i), in_axes=(0, 1, 0)) for i in range(s)]
+    gtheta = None
+    dep = lam_next
+    for i in reversed(range(s)):
+        Lam_i = lambda_stage_lanes[i](lam_next, L, h_n)
+        Xi = _barrier_with(Xs[i], dep)  # Xs: list of s lane-batched pytrees
+
+        def stage_vjp(X_l, t_l, Lam_l):
+            _, vjp_fn = jax.vjp(lambda X, th: f(X, t_l, th), X_l, params)
+            return vjp_fn(Lam_l)
+
+        xbar, thbar = jax.vmap(stage_vjp)(Xi, t_n + c[i] * h_n, Lam_i)
+        l_i = jax.tree_util.tree_map(jnp.negative, xbar)
+        L = set_stage(L, i, l_i)
+        if b[i] == 0.0:  # Eq. (8): btilde_i = h_n, per lane
+            contrib = jax.tree_util.tree_map(
+                lambda g: lane_bcast(h_n, g).astype(g.dtype) * g, thbar)
+        else:
+            contrib = jax.tree_util.tree_map(
+                lambda g: jnp.asarray(b[i], dtype=g.dtype) * g, thbar)
+        gtheta = contrib if gtheta is None else _tree_add(gtheta, contrib)
+        dep = l_i
+    lam_n = jax.vmap(combiner.lambda_update,
+                     in_axes=(0, 1, 0))(lam_next, L, h_n)
+    gtheta = jax.tree_util.tree_map(
+        lambda g: lane_bcast(h_n, g).astype(g.dtype) * g, gtheta)
+    return lam_n, gtheta
+
+
+def _masked_lanes_alg2_scan(f, tab, combiner, params, max_steps,
+                            xs, ts, hs, n_acc, lam, gtheta):
+    """Reverse Algorithm-2 scan over (max_steps, B) checkpoint rows.
+
+    ``n_acc`` is (B,); rows >= a lane's count leave that lane's lambda and
+    its grad-theta contribution untouched.  Rows beyond EVERY lane's count
+    skip the stage recomputation entirely (lax.cond on any(valid)).
+    """
+    def body(carry, inputs):
+        lam, gtheta = carry
+        x_n, t_n, h_n, idx = inputs
+        valid = idx < n_acc
+
+        def live(args):
+            lam, gtheta = args
+            lam2, gstep = symplectic_step_adjoint_lanes(
+                f, tab, x_n, t_n, h_n, params, lam, combiner)
+            lam = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(lane_bcast(valid, a), b, a),
+                lam, lam2)
+            gsum = jax.tree_util.tree_map(
+                lambda g: jnp.sum(jnp.where(lane_bcast(valid, g), g,
+                                            jnp.zeros((), g.dtype)),
+                                  axis=0), gstep)
+            return lam, _tree_add(gtheta, gsum)
+
+        def dead(args):
+            return args
+
+        out = jax.lax.cond(jnp.any(valid), live, dead, (lam, gtheta))
+        return out, None
+
+    idxs = jnp.arange(max_steps)
+    (lam, gtheta), _ = jax.lax.scan(body, (lam, gtheta),
+                                    (xs, ts, hs, idxs), reverse=True)
+    return lam, gtheta
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def odeint_symplectic_adaptive_batched(f: VectorField, tab: ButcherTableau,
+                                       cfg: AdaptiveConfig,
+                                       combine_backend: str,
+                                       x0, t0, t1, params):
+    """Batch-native adaptive solve (lane axis 0) with the exact symplectic
+    adjoint replaying each lane's own accepted grid."""
+    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+                                    combine_backend)
+    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+
+
+def _symab_fwd(f, tab, cfg, combine_backend, x0, t0, t1, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+                                    combine_backend)
+    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0, t1)
+    x_final = apply_on_failure_lanes(sol.x_final, sol.succeeded,
+                                     cfg.on_failure)
+    return x_final, res
+
+
+def _symab_bwd(f, tab, cfg, combine_backend, res, lam_N):
+    xs, ts, hs, n_acc, params, t0, t1 = res
+    combiner = get_combiner(tab, combine_backend)
+    lam0, gtheta = _masked_lanes_alg2_scan(
+        f, tab, combiner, params, cfg.max_steps, xs, ts, hs, n_acc,
+        lam_N, _tree_zeros(params))
+    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
+
+
+odeint_symplectic_adaptive_batched.defvjp(_symab_fwd, _symab_bwd)
+
+
+def _symab_saveat_solve(f, tab, cfg, combine_backend, x0, t0, ts, params):
+    obs, sols = rk_solve_adaptive_batched_saveat_stacked(
+        f, tab, x0, t0, ts, params, cfg, combine_backend)
+    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0, ts)
+    return obs, res
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def odeint_symplectic_saveat_adaptive_batched(
+        f: VectorField, tab: ButcherTableau, cfg: AdaptiveConfig,
+        combine_backend: str, x0, t0, ts, params):
+    """Batch-native adaptive solve observed at the (shared) times ``ts``.
+
+    Per-lane controller state threads across observation boundaries
+    (rk_solve_adaptive_batched_saveat_stacked); the backward pass walks the
+    segments in reverse, injects the per-lane observation cotangent at each
+    boundary, and replays every lane's own accepted grid inside the
+    segment.  Exact per lane to rounding.
+    """
+    obs, _ = _symab_saveat_solve(f, tab, cfg, combine_backend,
+                                 x0, t0, ts, params)
+    return obs
+
+
+def _symab_saveat_fwd(f, tab, cfg, combine_backend, x0, t0, ts, params):
+    return _symab_saveat_solve(f, tab, cfg, combine_backend,
+                               x0, t0, ts, params)
+
+
+def _symab_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
+    xs_all, ts_all, hs_all, n_accs, params, t0, ts = res
+    combiner = get_combiner(tab, combine_backend)
+    lam0 = jax.tree_util.tree_map(lambda l: jnp.zeros_like(l[0]), obs_bar)
+
+    def seg_body(carry, seg):
+        lam, gtheta = carry
+        ob_i, seg_xs, seg_ts, seg_hs, n_acc = seg
+        lam = _tree_add(lam, ob_i)
+        lam, gtheta = _masked_lanes_alg2_scan(
+            f, tab, combiner, params, cfg.max_steps,
+            seg_xs, seg_ts, seg_hs, n_acc, lam, gtheta)
+        return (lam, gtheta), None
+
+    (lam, gtheta), _ = jax.lax.scan(
+        seg_body, (lam0, _tree_zeros(params)),
+        (obs_bar, xs_all, ts_all, hs_all, n_accs), reverse=True)
+    return (lam, _time_zero(t0), _time_zero(ts), gtheta)
+
+
+odeint_symplectic_saveat_adaptive_batched.defvjp(_symab_saveat_fwd,
+                                                 _symab_saveat_bwd)

@@ -18,7 +18,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import AdaptiveConfig, SaveAt, as_gradient, solve
+from repro.core import AdaptiveConfig, SaveAt, as_gradient
+from repro.models.per_sample import model_solve_ys, per_sample_mode
 from repro.nn.common import dense_init, split_keys
 
 
@@ -38,6 +39,12 @@ class CNFConfig:
     rtol: float = 1e-6
     atol: float = 1e-8
     max_steps: int = 64
+    # per-sample adaptive step control (solve(..., batch_axis=0)): each data
+    # point gets its own accepted grid, error norm, and accept/reject, so
+    # one hard sample no longer drags the whole batch's f-eval count — and
+    # the per-sample likelihood stays tolerance-controlled sample-by-sample
+    # instead of batch-averaged (docs/batching.md).  Adaptive solves only.
+    per_sample: bool = False
 
 
 def init_cnf(key, cfg: CNFConfig, dtype=jnp.float32):
@@ -107,15 +114,17 @@ def cnf_forward(params, u, eps, cfg: CNFConfig):
     adaptive = AdaptiveConfig(rtol=cfg.rtol, atol=cfg.atol,
                               max_steps=cfg.max_steps) \
         if cfg.adaptive else None
+    per_sample = per_sample_mode(cfg)
 
     def body(carry, comp):
         x, dlp = carry
-        x, dlp_i, _ = solve(
+        x, dlp_i, _ = model_solve_ys(
             field, (x, jnp.zeros_like(dlp), eps), comp,
+            per_sample=per_sample,
             saveat=SaveAt(t1=cfg.t1), method=cfg.method,
             gradient=as_gradient(cfg.grad_mode),
             stepping=adaptive if adaptive is not None else cfg.n_steps,
-            backend=cfg.combine_backend).ys
+            backend=cfg.combine_backend)
         return (x, dlp + dlp_i), None
 
     (x, dlp), _ = jax.lax.scan(body, (u, dlp0), params["components"])
@@ -146,15 +155,17 @@ def cnf_flow_path(params, u, eps, cfg: CNFConfig, ts):
                               max_steps=cfg.max_steps) \
         if cfg.adaptive else None
     dlp0 = jnp.zeros(u.shape[0], dtype=u.dtype)   # dtype: see cnf_forward
+    per_sample = per_sample_mode(cfg)
 
     def body(carry, comp):
         x, dlp = carry
-        xo, dlpo, _ = solve(
+        xo, dlpo, _ = model_solve_ys(
             field, (x, jnp.zeros_like(dlp), eps), comp,
+            per_sample=per_sample,
             saveat=SaveAt(ts=ts), method=cfg.method,
             gradient=as_gradient(cfg.grad_mode),
             stepping=adaptive if adaptive is not None else cfg.n_steps,
-            backend=cfg.combine_backend).ys
+            backend=cfg.combine_backend)
         return (xo[-1], dlp + dlpo[-1]), (xo, dlp[None] + dlpo)
 
     _, (xs_path, dlp_path) = jax.lax.scan(body, (u, dlp0),

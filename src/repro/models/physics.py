@@ -18,7 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import SaveAt, as_gradient, solve
+from repro.core import AdaptiveConfig, SaveAt, as_gradient
+from repro.models.per_sample import model_solve_ys, per_sample_mode
 from repro.nn.common import dense_init, split_keys
 
 
@@ -35,6 +36,15 @@ class PhysicsConfig:
     combine_backend: str = "auto"  # stage-combine dispatch (core/combine.py)
     n_steps: int = 4
     dt: float = 0.1                # snapshot interval
+    adaptive: bool = False         # PI-controlled stepping instead of n_steps
+    rtol: float = 1e-6
+    atol: float = 1e-8
+    max_steps: int = 64            # per snapshot segment
+    # per-trajectory adaptive step control (solve(..., batch_axis=0)): each
+    # trajectory in the batch keeps its own accepted grid, so one
+    # sharp-gradient sample cannot force the whole batch onto its fine
+    # grid (adaptive solves only; docs/batching.md).
+    per_sample: bool = False
 
 
 def init_energy_net(key, cfg: PhysicsConfig, dtype=jnp.float32):
@@ -88,11 +98,28 @@ def hnn_field(system: str, dx: float):
     return field
 
 
+def _stepping(cfg: PhysicsConfig):
+    if cfg.adaptive:
+        return AdaptiveConfig(rtol=cfg.rtol, atol=cfg.atol,
+                              max_steps=cfg.max_steps)
+    return cfg.n_steps
+
+
 def predict_next(params, u, cfg: PhysicsConfig):
-    return solve(hnn_field(cfg.system, cfg.dx), u, params,
-                 saveat=SaveAt(t1=cfg.dt), method=cfg.method,
-                 gradient=as_gradient(cfg.grad_mode), stepping=cfg.n_steps,
-                 backend=cfg.combine_backend).ys
+    """One snapshot interval; u: (B, grid) -> (B, grid).
+
+    With ``cfg.per_sample`` (adaptive only) each trajectory runs under its
+    own step controller — ``models/per_sample.py`` wraps the state as
+    (B, 1, grid) singleton-batch lanes so the energy net still sees a
+    (batch, grid) layout, and ``batch_axis=0`` masks per-lane
+    accept/reject.
+    """
+    return model_solve_ys(hnn_field(cfg.system, cfg.dx), u, params,
+                          per_sample=per_sample_mode(cfg),
+                          saveat=SaveAt(t1=cfg.dt), method=cfg.method,
+                          gradient=as_gradient(cfg.grad_mode),
+                          stepping=_stepping(cfg),
+                          backend=cfg.combine_backend)
 
 
 def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
@@ -106,13 +133,17 @@ def rollout(params, u0, cfg: PhysicsConfig, horizon: int):
     compile time are O(1) in ``horizon`` — long production rollouts
     (hundreds of snapshots) compile as fast as short ones
     (tests/test_trace_size.py pins this for the 64-snapshot case).
+    With ``cfg.per_sample`` adaptive stepping, each trajectory threads its
+    OWN controller across every snapshot boundary (batch_axis=0).
     Returns (horizon, B, grid).
     """
     ts = cfg.dt * jnp.arange(1, horizon + 1)
-    return solve(hnn_field(cfg.system, cfg.dx), u0, params,
-                 saveat=SaveAt(ts=ts), method=cfg.method,
-                 gradient=as_gradient(cfg.grad_mode), stepping=cfg.n_steps,
-                 backend=cfg.combine_backend).ys
+    return model_solve_ys(hnn_field(cfg.system, cfg.dx), u0, params,
+                          per_sample=per_sample_mode(cfg),
+                          saveat=SaveAt(ts=ts), method=cfg.method,
+                          gradient=as_gradient(cfg.grad_mode),
+                          stepping=_stepping(cfg),
+                          backend=cfg.combine_backend)
 
 
 def physics_loss(params, u_k, u_k1, cfg: PhysicsConfig):

@@ -1,0 +1,439 @@
+"""Batch-native adaptive solving: masked per-lane step control.
+
+Acceptance criteria pinned here (ISSUE 5):
+  * batched exactness — for a heterogeneous-stiffness batch,
+    ``solve(..., batch_axis=0)`` values, per-lane stats, accepted grids,
+    and symplectic-adjoint / continuous-adjoint gradients match a Python
+    loop of single-trajectory solves to rounding error;
+  * masked per-lane control needs fewer total per-trajectory f-evals than
+    lockstep batch-in-state solving on a heterogeneous batch;
+  * per-lane failure isolation — one lane exhausting its budgets poisons
+    (and flags) only itself;
+  * the adaptive ``_error_norm`` applies per-leaf atol/rtol scaling
+    identically in the batched and unbatched paths, including
+    mixed-magnitude pytree states.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (AdaptiveConfig, ContinuousAdjoint, DirectBackprop,
+                        GradientStrategy, RematStep, SaveAt, SymplecticAdjoint,
+                        batched_capability_matrix, capability_matrix,
+                        lane_count, solve)
+from repro.core.rk import (_error_norm, _error_norm_lanes,
+                           apply_on_failure_lanes, rk_solve_adaptive,
+                           rk_solve_adaptive_batched)
+from repro.core.tableau import get_tableau
+
+B = 4
+TS = jnp.array([0.4, 0.7, 1.0])
+
+
+def osc_field(state, t, p):
+    """Per-lane oscillator: stiffness omega rides in the state (zero
+    dynamics), the nonlinear coupling makes param gradients nonzero."""
+    x, om = state
+    h = jnp.tanh(x @ p["w"])
+    dx = om[..., None] * jnp.stack(
+        [x[..., 1] + h[..., 0], -x[..., 0] + h[..., 1]], axis=-1)
+    return (dx, jnp.zeros_like(om))
+
+
+PARAMS = {"w": jax.random.normal(jax.random.PRNGKey(0), (2, 2)) * 0.4}
+OMEGAS = jnp.logspace(0.0, 1.2, B)          # ~1x .. ~16x stiffness spread
+X0 = (jax.random.normal(jax.random.PRNGKey(1), (B, 2)), OMEGAS)
+CFG = AdaptiveConfig(rtol=1e-7, atol=1e-9, max_steps=192, initial_step=0.05)
+
+
+def lane(b):
+    return (X0[0][b], X0[1][b])
+
+
+def tree_maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Values, grids, and per-lane stats vs a Python loop of single solves
+# ---------------------------------------------------------------------------
+
+def test_batched_t1_values_and_stats_match_singles():
+    sol = jax.jit(lambda x: solve(osc_field, x, PARAMS, stepping=CFG,
+                                  gradient=DirectBackprop(),
+                                  batch_axis=0))(X0)
+    assert sol.stats["n_steps"].shape == (B,)
+    assert sol.success.shape == (B,)
+    for b in range(B):
+        one = solve(osc_field, lane(b), PARAMS, stepping=CFG,
+                    gradient=DirectBackprop())
+        assert tree_maxdiff((sol.ys[0][b], sol.ys[1][b]), one.ys) < 1e-12
+        for k in ("n_steps", "n_fevals", "n_attempts"):
+            assert int(sol.stats[k][b]) == int(one.stats[k]), (b, k)
+        assert bool(sol.success[b]) and bool(one.success)
+    # heterogeneous stiffness ⇒ heterogeneous per-lane step counts
+    assert int(sol.stats["n_steps"][-1]) > int(sol.stats["n_steps"][0])
+
+
+def test_batched_accepted_grids_match_singles():
+    bat = rk_solve_adaptive_batched(osc_field, get_tableau("dopri5"), X0,
+                                    0.0, 1.0, PARAMS, CFG, "jnp")
+    for b in range(B):
+        one = rk_solve_adaptive(osc_field, get_tableau("dopri5"), lane(b),
+                                0.0, 1.0, PARAMS, CFG, "jnp")
+        assert int(bat.n_accepted[b]) == int(one.n_accepted)
+        n = int(one.n_accepted)
+        np.testing.assert_allclose(bat.ts[:n, b], one.ts[:n], rtol=0,
+                                   atol=1e-14)
+        np.testing.assert_allclose(bat.hs[:n, b], one.hs[:n], rtol=0,
+                                   atol=1e-14)
+        assert abs(float(bat.h_final[b] - one.h_final)) < 1e-14
+
+
+def test_batched_saveat_values_and_stats_match_singles():
+    sol = jax.jit(lambda x: solve(osc_field, x, PARAMS,
+                                  saveat=SaveAt(ts=TS), stepping=CFG,
+                                  gradient=DirectBackprop(),
+                                  batch_axis=0))(X0)
+    assert sol.ys[0].shape == (TS.shape[0], B, 2)
+    for b in range(B):
+        one = solve(osc_field, lane(b), PARAMS, saveat=SaveAt(ts=TS),
+                    stepping=CFG, gradient=DirectBackprop())
+        assert tree_maxdiff((sol.ys[0][:, b], sol.ys[1][:, b]),
+                            one.ys) < 1e-12
+        for k in ("n_steps", "n_fevals", "n_attempts"):
+            assert int(sol.stats[k][b]) == int(one.stats[k]), (b, k)
+
+
+def test_batched_reverse_time_matches_singles():
+    sol = solve(osc_field, X0, PARAMS, saveat=SaveAt(t1=-0.5),
+                stepping=CFG, gradient=DirectBackprop(), batch_axis=0)
+    for b in range(B):
+        one = solve(osc_field, lane(b), PARAMS, saveat=SaveAt(t1=-0.5),
+                    stepping=CFG, gradient=DirectBackprop())
+        assert tree_maxdiff((sol.ys[0][b], sol.ys[1][b]), one.ys) < 1e-12
+
+
+def test_fixed_grid_batched_is_plain_solve_with_lane_stats():
+    sol_b = solve(osc_field, X0, PARAMS, stepping=8, batch_axis=0)
+    sol_p = solve(osc_field, X0, PARAMS, stepping=8)
+    assert tree_maxdiff(sol_b.ys, sol_p.ys) == 0.0
+    assert sol_b.stats["n_steps"].shape == (B,)
+    assert jnp.all(sol_b.stats["n_steps"] == int(sol_p.stats["n_steps"]))
+    assert sol_b.success.shape == (B,) and bool(jnp.all(sol_b.success))
+
+
+# ---------------------------------------------------------------------------
+# Gradients: batched backward passes replay each lane's own grid
+# ---------------------------------------------------------------------------
+
+def _loop_grads(loss_one):
+    gx, gom, gp = [], [], None
+    for b in range(B):
+        (gxb, gob), gpb = jax.grad(loss_one, argnums=(0, 1))(lane(b), PARAMS)
+        gx.append(gxb)
+        gom.append(gob)
+        gp = gpb if gp is None else tree_add(gp, gpb)
+    return (jnp.stack(gx), jnp.stack(gom)), gp
+
+
+@pytest.mark.parametrize("gradient", [SymplecticAdjoint(),
+                                      ContinuousAdjoint()],
+                         ids=["symplectic", "adjoint"])
+def test_batched_t1_gradient_matches_singles(gradient):
+    def loss_b(x, p):
+        ys = solve(osc_field, x, p, stepping=CFG, gradient=gradient,
+                   batch_axis=0).ys
+        return jnp.sum(ys[0] ** 2)
+
+    def loss_one(x_l, p):
+        ys = solve(osc_field, x_l, p, stepping=CFG, gradient=gradient).ys
+        return jnp.sum(ys[0] ** 2)
+
+    gb_x, gb_p = jax.jit(jax.grad(loss_b, argnums=(0, 1)))(X0, PARAMS)
+    gs_x, gs_p = _loop_grads(loss_one)
+    assert tree_maxdiff(gb_x, gs_x) < 1e-9
+    assert tree_maxdiff(gb_p, gs_p) < 1e-9
+
+
+@pytest.mark.parametrize("gradient", [SymplecticAdjoint(),
+                                      ContinuousAdjoint()],
+                         ids=["symplectic", "adjoint"])
+def test_batched_saveat_gradient_matches_singles(gradient):
+    def loss_b(x, p):
+        ys = solve(osc_field, x, p, saveat=SaveAt(ts=TS), stepping=CFG,
+                   gradient=gradient, batch_axis=0).ys
+        return jnp.sum(ys[0] ** 2) + jnp.sum(ys[0][0] * ys[0][-1])
+
+    def loss_one(x_l, p):
+        ys = solve(osc_field, x_l, p, saveat=SaveAt(ts=TS), stepping=CFG,
+                   gradient=gradient).ys
+        return jnp.sum(ys[0] ** 2) + jnp.sum(ys[0][0] * ys[0][-1])
+
+    gb_x, gb_p = jax.jit(jax.grad(loss_b, argnums=(0, 1)))(X0, PARAMS)
+    gs_x, gs_p = _loop_grads(loss_one)
+    assert tree_maxdiff(gb_x, gs_x) < 1e-9
+    assert tree_maxdiff(gb_p, gs_p) < 1e-9
+
+
+@pytest.mark.slow  # the reference unrolls ~1k replay steps under jax.grad
+def test_symplectic_batched_gradient_is_exact_vs_backprop_replay():
+    """The batched symplectic gradient equals jax.grad through a fixed-grid
+    replay of each lane's realized step sequence (Theorem 2 per lane)."""
+    tab = get_tableau("bosh3")
+    # bosh3 is order 3: the stiffest lane needs ~1k accepted steps here
+    cfg = dataclasses.replace(CFG, rtol=1e-5, atol=1e-7, max_steps=1536,
+                              max_attempts=8192)
+
+    def loss_b(x, p):
+        ys = solve(osc_field, x, p, method="bosh3", stepping=cfg,
+                   gradient=SymplecticAdjoint(), batch_axis=0).ys
+        return jnp.sum(ys[0] ** 2)
+
+    gb_x, gb_p = jax.grad(loss_b, argnums=(0, 1))(X0, PARAMS)
+
+    # replay each lane's accepted (t, h) sequence with plain backprop
+    from repro.core.rk import rk_step
+    gs_x0, gs_om, gs_p = [], [], None
+    for b in range(B):
+        sol = rk_solve_adaptive(osc_field, tab, lane(b), 0.0, 1.0, PARAMS,
+                                cfg, "jnp")
+        n = int(sol.n_accepted)
+        ts_b, hs_b = np.asarray(sol.ts[:n]), np.asarray(sol.hs[:n])
+
+        def replay(x_l, p):
+            x = x_l
+            for t_n, h_n in zip(ts_b, hs_b):
+                x, _ = rk_step(osc_field, tab, x, t_n, h_n, p,
+                               with_error=False)
+            return jnp.sum(x[0] ** 2)
+
+        (gxb, gob), gpb = jax.grad(replay, argnums=(0, 1))(lane(b), PARAMS)
+        gs_x0.append(gxb)
+        gs_om.append(gob)
+        gs_p = gpb if gs_p is None else tree_add(gs_p, gpb)
+    assert tree_maxdiff(gb_x, (jnp.stack(gs_x0), jnp.stack(gs_om))) < 1e-9
+    assert tree_maxdiff(gb_p, gs_p) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# The acceptance number: masked beats lockstep on per-trajectory f-evals
+# ---------------------------------------------------------------------------
+
+def test_masked_needs_fewer_trajectory_fevals_than_lockstep():
+    masked = solve(osc_field, X0, PARAMS, stepping=CFG,
+                   gradient=DirectBackprop(), batch_axis=0)
+    lockstep = solve(osc_field, X0, PARAMS, stepping=CFG,
+                     gradient=DirectBackprop())
+    fe_masked = int(jnp.sum(masked.stats["n_fevals"]))
+    fe_lockstep = B * int(lockstep.stats["n_fevals"])
+    assert fe_masked < fe_lockstep, (fe_masked, fe_lockstep)
+
+
+# ---------------------------------------------------------------------------
+# _error_norm: per-leaf scaling is identical batched and unbatched
+# ---------------------------------------------------------------------------
+
+def _mixed_state(b=None):
+    big = 1e3 * jax.random.normal(jax.random.PRNGKey(2), (B, 3))
+    small = 1e-3 * jax.random.normal(jax.random.PRNGKey(3), (B, 2))
+    if b is None:
+        return {"big": big, "small": small}
+    return {"big": big[b], "small": small[b]}
+
+
+def test_error_norm_lanes_equals_per_lane_error_norm():
+    x, xn = _mixed_state(), jax.tree_util.tree_map(
+        lambda l: l * 1.001 + 1e-6, _mixed_state())
+    err = jax.tree_util.tree_map(lambda a, b: (b - a) * 0.01, x, xn)
+    lanes = _error_norm_lanes(err, x, xn, 1e-6, 1e-8)
+    assert lanes.shape == (B,)
+    for b in range(B):
+        one = _error_norm(
+            jax.tree_util.tree_map(lambda l: l[b], err),
+            jax.tree_util.tree_map(lambda l: l[b], x),
+            jax.tree_util.tree_map(lambda l: l[b], xn), 1e-6, 1e-8)
+        assert float(jnp.abs(lanes[b] - one)) == 0.0
+
+
+def test_error_norm_matches_elementwise_reference():
+    """Pin the norm semantics: elementwise Hairer scale per leaf
+    (atol + rtol * max(|x|, |x_next|)), element-count-weighted RMS across
+    ALL leaves — i.e. per-leaf atol scaling, no max-reduction and no
+    per-leaf averaging that would over-weight small leaves."""
+    x, xn = _mixed_state(0), _mixed_state(1)
+    err = jax.tree_util.tree_map(lambda a, b: 0.3 * (b - a), x, xn)
+    rtol, atol = 1e-4, 1e-7
+    total, count = 0.0, 0
+    for k in ("big", "small"):
+        scale = atol + rtol * np.maximum(np.abs(np.asarray(x[k])),
+                                         np.abs(np.asarray(xn[k])))
+        r = np.float32(np.asarray(err[k]) / scale)
+        total += float(np.sum(r * r))
+        count += r.size
+    ref = np.sqrt(total / count)
+    got = float(_error_norm(err, x, xn, rtol, atol))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_mixed_magnitude_batched_grid_matches_singles():
+    """Accepted grids for a mixed-magnitude pytree state agree lane-by-lane
+    between the batched and single-trajectory controllers."""
+    def decay(state, t, p):
+        return jax.tree_util.tree_map(
+            lambda l: -p["k"] * l * (1.0 + 0.5 * jnp.tanh(l / 1e3)), state)
+
+    x0 = _mixed_state()
+    p = {"k": jnp.asarray(1.7)}
+    cfg = AdaptiveConfig(rtol=1e-6, atol=1e-9, max_steps=128,
+                         initial_step=0.05)
+    tab = get_tableau("bosh3")
+    bat = rk_solve_adaptive_batched(decay, tab, x0, 0.0, 1.0, p, cfg, "jnp")
+    for b in range(B):
+        one = rk_solve_adaptive(decay, tab,
+                                jax.tree_util.tree_map(lambda l: l[b], x0),
+                                0.0, 1.0, p, cfg, "jnp")
+        assert int(bat.n_accepted[b]) == int(one.n_accepted)
+        n = int(one.n_accepted)
+        np.testing.assert_allclose(bat.hs[:n, b], one.hs[:n], rtol=0,
+                                   atol=1e-14)
+
+
+# ---------------------------------------------------------------------------
+# Per-lane failure isolation
+# ---------------------------------------------------------------------------
+
+def test_failed_lane_is_poisoned_and_flagged_alone():
+    # a step budget the stiffest lane cannot meet, the easiest easily can
+    # (at CFG's tolerances the per-lane accepted counts span ~6..35)
+    tight = dataclasses.replace(CFG, max_steps=24)
+    sol = solve(osc_field, X0, PARAMS, stepping=tight,
+                gradient=DirectBackprop(), batch_axis=0)
+    ok = np.asarray(sol.success)
+    assert bool(ok[0]) and not bool(ok[-1])   # easy lane fine, stiff fails
+    assert bool(jnp.all(jnp.isfinite(sol.ys[0][0])))
+    assert bool(jnp.all(jnp.isnan(sol.ys[0][-1])))
+    # healthy lanes still match their single solves
+    one = solve(osc_field, lane(0), PARAMS, stepping=tight,
+                gradient=DirectBackprop())
+    assert tree_maxdiff((sol.ys[0][0], sol.ys[1][0]), one.ys) < 1e-12
+
+
+def test_poisoned_lane_does_not_burn_max_attempts_in_later_segments():
+    """A lane NaN-poisoned in an early SaveAt segment must drop out of the
+    batched while_loop after ONE doomed trial per later segment (the NaN h
+    carry bail), not pin every healthy lane behind max_attempts full-batch
+    steps."""
+    tight = dataclasses.replace(CFG, max_steps=24, max_attempts=4096)
+    ts = jnp.linspace(0.25, 1.0, 4)
+    sol = solve(osc_field, X0, PARAMS, saveat=SaveAt(ts=ts), stepping=tight,
+                gradient=DirectBackprop(), batch_axis=0)
+    ok = np.asarray(sol.success)
+    assert bool(ok[0]) and not bool(ok[-1])
+    # dead lane: max_steps-ish attempts in its failing segment, then ~1 per
+    # later segment — nowhere near segments * max_attempts
+    assert int(sol.stats["n_attempts"][-1]) < 200
+    # healthy lanes still match their single solves exactly
+    one = solve(osc_field, lane(0), PARAMS, saveat=SaveAt(ts=ts),
+                stepping=tight, gradient=DirectBackprop())
+    assert tree_maxdiff((sol.ys[0][:, 0], sol.ys[1][:, 0]), one.ys) < 1e-12
+    assert int(sol.stats["n_attempts"][0]) == int(one.stats["n_attempts"])
+
+
+def test_nan_state_solve_bails_instead_of_spinning():
+    """Single-trajectory analogue: a NaN initial state exits the adaptive
+    loop after one trial instead of burning the max_attempts budget."""
+    sol = rk_solve_adaptive(osc_field, get_tableau("dopri5"),
+                            (jnp.full((2,), jnp.nan), jnp.float64(1.0)),
+                            0.0, 1.0, PARAMS, CFG, "jnp")
+    assert not bool(sol.succeeded)
+    assert int(sol.n_attempts) <= 2
+
+
+def test_apply_on_failure_lanes_policies():
+    x = {"a": jnp.ones((3, 2)), "n": jnp.ones((3,), jnp.int32)}
+    ok = jnp.array([True, False, True])
+    out = apply_on_failure_lanes(x, ok, "nan")
+    assert bool(jnp.all(jnp.isfinite(out["a"][0])))
+    assert bool(jnp.all(jnp.isnan(out["a"][1])))
+    assert bool(jnp.all(out["n"] == 1))       # integer leaves untouched
+    out = apply_on_failure_lanes(x, ok, "ignore")
+    assert tree_maxdiff(out, x) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Capability matrix, validation, and the shim
+# ---------------------------------------------------------------------------
+
+def test_batched_capability_matrix_contents():
+    m = batched_capability_matrix()
+    assert set(m) == set(capability_matrix())
+    for name in ("symplectic", "backprop", "adjoint"):
+        assert m[name][("adaptive", "t1")] and m[name][("adaptive", "ts")]
+    for name in ("remat_step", "remat_solve"):
+        assert not m[name][("adaptive", "t1")]
+        assert m[name][("fixed", "t1")]       # fixed grids batch for free
+    assert not m["backprop"][("adaptive", "dense")]
+
+
+def test_batched_capability_errors_are_uniform():
+    with pytest.raises(ValueError, match="batch_axis=0"):
+        solve(osc_field, X0, PARAMS, stepping=CFG, gradient=RematStep(),
+              batch_axis=0)
+    with pytest.raises(ValueError, match="batch_axis=0"):
+        solve(osc_field, X0, PARAMS, saveat=SaveAt(ts=TS, dense=True),
+              stepping=CFG, gradient=DirectBackprop(), batch_axis=0)
+
+
+def test_batch_axis_validation():
+    with pytest.raises(ValueError, match="only the leading axis"):
+        solve(osc_field, X0, PARAMS, stepping=CFG, batch_axis=1)
+    with pytest.raises(ValueError, match="leading lane axis"):
+        solve(osc_field, (X0[0], jnp.float64(1.0)), PARAMS, stepping=CFG,
+              batch_axis=0)
+    with pytest.raises(ValueError, match="same leading lane-axis size"):
+        lane_count((jnp.ones((3, 2)), jnp.ones((4,))))
+
+
+def test_toy_strategy_batched_cells_default():
+    class Toy(GradientStrategy):
+        name = "toy_batched_cells"
+        capabilities = frozenset({("fixed", "t1"), ("adaptive", "t1")})
+
+    # fixed cells batch for free; adaptive cells need an explicit driver
+    assert Toy.batched_cells() == frozenset({("fixed", "t1")})
+
+
+@pytest.mark.filterwarnings(
+    "ignore:odeint-style entry point:DeprecationWarning")
+def test_odeint_shim_passes_batch_axis_through():
+    from repro.core import odeint
+    ys = odeint(osc_field, X0, PARAMS, t1=1.0, adaptive=CFG,
+                grad_mode="backprop", batch_axis=0)
+    sol = solve(osc_field, X0, PARAMS, saveat=SaveAt(t1=1.0), stepping=CFG,
+                gradient=DirectBackprop(), batch_axis=0)
+    assert tree_maxdiff(ys, sol.ys) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Backend parity
+# ---------------------------------------------------------------------------
+
+def test_batched_pallas_backend_matches_jnp():
+    cfg = dataclasses.replace(CFG, rtol=1e-5, atol=1e-7, max_steps=64)
+    sol_j = solve(osc_field, X0, PARAMS, stepping=cfg,
+                  gradient=DirectBackprop(), batch_axis=0, backend="jnp")
+    sol_p = solve(osc_field, X0, PARAMS, stepping=cfg,
+                  gradient=DirectBackprop(), batch_axis=0, backend="pallas")
+    assert bool(jnp.all(sol_j.success)) and bool(jnp.all(sol_p.success))
+    assert tree_maxdiff(sol_j.ys, sol_p.ys) < 1e-5

@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Markdown cross-link checker: dead relative links in docs/ + README fail.
+
+Scans README.md and every ``docs/**/*.md`` for inline markdown links
+``[text](target)`` and verifies that each RELATIVE target resolves to an
+existing file (anchors are stripped; external http(s)/mailto links and
+pure-anchor links are skipped).  Also enforces the docs-index invariant:
+every page under docs/ must be reachable (linked) from docs/README.md.
+
+Usage (from the repo root):
+
+    python tools/check_docs_links.py        # exit 1 on any dead link
+
+Run by the CI docs lane and by tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List, Tuple
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# inline links only; targets never contain spaces in this repo's docs
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _doc_files(root: pathlib.Path) -> List[pathlib.Path]:
+    files = [root / "README.md"]
+    files += sorted((root / "docs").glob("**/*.md"))
+    return [f for f in files if f.exists()]
+
+
+def find_dead_links(root: pathlib.Path = REPO_ROOT
+                    ) -> List[Tuple[str, str]]:
+    """(source file, target) pairs whose relative target does not exist."""
+    dead = []
+    for f in _doc_files(root):
+        for m in LINK_RE.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (f.parent / path).exists():
+                dead.append((str(f.relative_to(root)), target))
+    return dead
+
+
+def find_unreachable_docs(root: pathlib.Path = REPO_ROOT) -> List[str]:
+    """docs/ pages not linked from the docs/README.md table of contents."""
+    index = root / "docs" / "README.md"
+    if not index.exists():
+        return ["docs/README.md (the docs index itself is missing)"]
+    linked = set()
+    for m in LINK_RE.finditer(index.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        linked.add((index.parent / target.split("#", 1)[0]).resolve())
+    missing = []
+    for page in sorted((root / "docs").glob("**/*.md")):
+        if page.name == "README.md":
+            continue
+        if page.resolve() not in linked:
+            missing.append(str(page.relative_to(root)))
+    return missing
+
+
+def main() -> int:
+    dead = find_dead_links()
+    unreachable = find_unreachable_docs()
+    for src, target in dead:
+        print(f"DEAD LINK  {src}: ({target})", file=sys.stderr)
+    for page in unreachable:
+        print(f"UNREACHABLE  {page}: not linked from docs/README.md",
+              file=sys.stderr)
+    if dead or unreachable:
+        return 1
+    n = len(_doc_files(REPO_ROOT))
+    print(f"docs links OK ({n} markdown files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
