@@ -1,0 +1,41 @@
+"""repro.analysis — jaxpr-level static auditor for the solver stack.
+
+Proves, before anything runs, the properties the paper states statically:
+
+  * the Table-1 memory ordering (symplectic O(N + s + L) flat in N vs
+    DirectBackprop O(N s L) linear) via define-to-last-use liveness over
+    each strategy's reverse-mode jaxpr          (``memory``)
+  * dtype discipline: no silent float demotions in hot loops or cotangent
+    paths                                        (``rules.dtype_findings``)
+  * trace-size budgets: a committed eqn-count ratchet per enumerated
+    solve case                                   (``rules.budget_findings``)
+  * hazards: large closed-over constants, undonated entry-point buffers
+
+Run it: ``PYTHONPATH=src python -m repro.analysis --check`` (the CI lane).
+Docs: docs/analysis.md.
+"""
+from .cases import (Case, case_jaxprs, enumerate_cases, ensure_x64,
+                    make_probe, mlp_field)
+from .memory import (MemoryRow, memory_findings, memory_rows,
+                     memory_table_markdown)
+from .report import (AnalysisReport, BUDGET_PATH, load_budgets,
+                     render_report, run_analysis, write_budgets)
+from .rules import (Finding, RULE_REGISTRY, budget_findings,
+                    constant_findings, donation_findings, dtype_findings,
+                    flatness_findings, register_rule)
+from .traversal import (EqnContext, aval_bytes, closed_constants,
+                        count_eqns, dce, eqn_subjaxprs, iter_eqns,
+                        peak_resident_bytes, subjaxprs)
+
+__all__ = [
+    "AnalysisReport", "BUDGET_PATH", "Case", "EqnContext", "Finding",
+    "MemoryRow", "RULE_REGISTRY", "aval_bytes", "budget_findings",
+    "case_jaxprs", "closed_constants", "constant_findings", "count_eqns",
+    "dce", "donation_findings", "dtype_findings", "enumerate_cases",
+    "ensure_x64",
+    "eqn_subjaxprs", "flatness_findings", "iter_eqns", "load_budgets",
+    "make_probe", "memory_findings", "memory_rows",
+    "memory_table_markdown", "mlp_field", "peak_resident_bytes",
+    "register_rule", "render_report", "run_analysis", "subjaxprs",
+    "write_budgets",
+]

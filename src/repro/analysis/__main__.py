@@ -1,0 +1,66 @@
+"""CLI: ``PYTHONPATH=src python -m repro.analysis [--check] ...``.
+
+Modes
+  (default)           trace every case, run every rule, print the report
+  --check             same, exit 1 on any ERROR finding (the CI lane)
+  --write-budgets     regenerate the analysis_budgets.json ratchet
+  --write-docs-table  refresh the generated memory table in docs/analysis.md
+
+Knobs
+  --budgets PATH      ratchet file (default: <repo>/analysis_budgets.json)
+  --methods a,b       tableaus for the per-case rules (default: dopri5;
+                      the memory rule always runs dopri5 AND bosh3)
+  --no-memory         skip the memory-bound rule (fast budget/dtype pass)
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from .report import (BUDGET_PATH, load_budgets, render_report, run_analysis,
+                     write_budgets, write_docs_table)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level static auditor for the solver stack")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero on any error-severity finding")
+    ap.add_argument("--write-budgets", action="store_true",
+                    help="regenerate the trace-size budget ratchet")
+    ap.add_argument("--write-docs-table", action="store_true",
+                    help="refresh the generated table in docs/analysis.md")
+    ap.add_argument("--budgets", type=pathlib.Path, default=BUDGET_PATH)
+    ap.add_argument("--methods", default="dopri5",
+                    help="comma-separated tableau names for per-case rules")
+    ap.add_argument("--no-memory", action="store_true")
+    args = ap.parse_args(argv)
+
+    methods = tuple(m for m in args.methods.split(",") if m)
+    budgets = None if args.write_budgets else load_budgets(args.budgets)
+    if budgets is None and not args.write_budgets and args.check:
+        print(f"{args.budgets}: no committed budget file; bootstrap with "
+              "`python -m repro.analysis --write-budgets`",
+              file=sys.stderr)
+        return 1
+
+    run_memory = not args.no_memory or args.write_docs_table
+    report = run_analysis(budgets, methods=methods, run_memory=run_memory)
+
+    if args.write_budgets:
+        write_budgets(report.counts, args.budgets)
+        print(f"wrote {len(report.counts)} budgets to {args.budgets}")
+    if args.write_docs_table:
+        write_docs_table(report.rows)
+        print("wrote memory table into docs/analysis.md")
+
+    print(render_report(report))
+    if args.check and not report.ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

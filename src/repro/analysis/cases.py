@@ -1,0 +1,138 @@
+"""Probe-case enumeration: every legal solve configuration, as jaxprs.
+
+The case list is ENUMERATED from ``GRADIENT_REGISTRY`` — the same
+declarative ``capabilities`` / ``batched_cells()`` frozensets ``solve``
+enforces — so a newly registered strategy (or a capability change) is
+analyzed automatically, exactly like the docs capability tables.
+
+Each case closes a small MLP-field solve into jaxprs under x64 with f64
+inputs (so any hardcoded narrower dtype surfaces as a
+``convert_element_type`` demotion): a ``value`` jaxpr always, and a
+``grad`` jaxpr where the cell is reverse-differentiable — every fixed
+cell, and the adaptive cells of the custom-VJP strategies (symplectic,
+adjoint).  DirectBackprop's adaptive cells are value/JVP-only (reverse
+cannot cross ``lax.while_loop``) and dense output is value-only, matching
+docs/gradients.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AdaptiveConfig, SaveAt, solve
+from repro.core.api import GRADIENT_REGISTRY
+
+__all__ = ["Case", "enumerate_cases", "case_jaxprs", "mlp_field",
+           "make_probe", "ensure_x64", "CUSTOM_VJP_STRATEGIES"]
+
+# strategies whose adaptive drivers are custom_vjp (reverse-differentiable
+# across the while_loop); everything else is fixed-grid-grad only
+CUSTOM_VJP_STRATEGIES = frozenset({"symplectic", "adjoint"})
+
+
+def ensure_x64() -> None:
+    """The dtype rule probes with f64 inputs: without x64 they silently
+    become f32 and every demotion disappears.  Idempotent."""
+    jax.config.update("jax_enable_x64", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One (strategy, stepping, saveat, batched, method) probe cell."""
+    strategy: str
+    stepping: str                 # "fixed" | "adaptive"
+    saveat: str                   # "t1" | "ts" | "dense"
+    batched: bool
+    method: str = "dopri5"
+
+    @property
+    def key(self) -> str:
+        mode = "batched" if self.batched else "single"
+        return "/".join([self.strategy, self.method, self.stepping,
+                         self.saveat, mode])
+
+    @property
+    def differentiable(self) -> bool:
+        """Reverse-mode legal for this cell (docs/gradients.md)."""
+        if self.saveat == "dense":
+            return False
+        return self.stepping == "fixed" \
+            or self.strategy in CUSTOM_VJP_STRATEGIES
+
+
+def enumerate_cases(methods: Tuple[str, ...] = ("dopri5",)):
+    """Every legal cell of every registered strategy, single and batched."""
+    cases = []
+    for name in sorted(GRADIENT_REGISTRY):
+        cls = GRADIENT_REGISTRY[name]
+        for method in methods:
+            for sk, vk in sorted(cls.capabilities):
+                cases.append(Case(name, sk, vk, False, method))
+            for sk, vk in sorted(cls.batched_cells()):
+                cases.append(Case(name, sk, vk, True, method))
+    return cases
+
+
+def mlp_field(x_is_batched: bool = False):
+    """Tiny tanh-MLP vector field f(x, t, params); works for (dim,) and
+    (B, dim) states (the ops are dim-generic)."""
+    del x_is_batched
+
+    def field(x, t, params):
+        h = jnp.tanh(x @ params["w1"] + params["b1"] + t * params["bt"])
+        return h @ params["w2"] + params["b2"]
+    return field
+
+
+def make_probe(case: Case, *, dim: int = 4, hidden: int = 16,
+               batch: int = 3, n_steps: int = 3, max_steps: int = 8,
+               n_obs: int = 4, dtype=jnp.float64):
+    """(value_fn, grad_fn_or_None, example_args) for one case.
+
+    Only avals matter for the analysis, so inputs are zeros; nothing is
+    ever executed — the probes exist to be ``jax.make_jaxpr``'d.
+    """
+    ensure_x64()
+    field = mlp_field(case.batched)
+    x0 = jnp.zeros((batch, dim) if case.batched else (dim,), dtype)
+    params = {"w1": jnp.zeros((dim, hidden), dtype),
+              "b1": jnp.zeros((hidden,), dtype),
+              "bt": jnp.zeros((hidden,), dtype),
+              "w2": jnp.zeros((hidden, dim), dtype),
+              "b2": jnp.zeros((dim,), dtype)}
+    stepping = n_steps if case.stepping == "fixed" else \
+        AdaptiveConfig(max_steps=max_steps)
+    if case.saveat == "t1":
+        saveat = SaveAt(t1=1.0)
+    else:
+        saveat = SaveAt(ts=jnp.linspace(1.0 / n_obs, 1.0, n_obs,
+                                        dtype=dtype),
+                        dense=case.saveat == "dense")
+    batch_axis = 0 if case.batched else None
+
+    def value_fn(x0, params):
+        sol = solve(field, x0, params, saveat=saveat, method=case.method,
+                    gradient=case.strategy, stepping=stepping,
+                    backend="jnp", batch_axis=batch_axis)
+        return sol.ys
+
+    grad_fn = None
+    if case.differentiable:
+        def loss_fn(x0, params):
+            ys = value_fn(x0, params)
+            return sum(jnp.sum(jnp.sin(leaf) ** 2)
+                       for leaf in jax.tree_util.tree_leaves(ys))
+        grad_fn = jax.grad(loss_fn, argnums=(0, 1))
+    return value_fn, grad_fn, (x0, params)
+
+
+def case_jaxprs(case: Case, **knobs) -> Dict[str, Optional[object]]:
+    """Trace one case: {"value": ClosedJaxpr, "grad": ClosedJaxpr | None}."""
+    value_fn, grad_fn, args = make_probe(case, **knobs)
+    out = {"value": jax.make_jaxpr(value_fn)(*args), "grad": None}
+    if grad_fn is not None:
+        out["grad"] = jax.make_jaxpr(grad_fn)(*args)
+    return out

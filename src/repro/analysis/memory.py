@@ -1,0 +1,179 @@
+"""Memory-bound rule: the paper's Table-1 ordering, checked statically.
+
+For each registered strategy the rule traces the reverse-mode jaxpr of a
+fixed-grid solve (small state, wide hidden layer — so the network term L
+dominates the per-step checkpoints) at N and 8N steps, runs the liveness
+accounting of ``traversal.peak_resident_bytes`` on each, and asserts the
+scaling the paper proves:
+
+  symplectic   peak O(N + s + L): FLAT in N within a small constant — the
+               N-dependence is only the (N, state)-shaped checkpoint
+               buffer, negligible against the one live stage-VJP graph.
+  remat_step   peak O(N + s L): flat for the same reason (carries
+               checkpointed, one step's graph rematerialized at a time).
+  adjoint      peak O(L): flat (one augmented backward solve, no stacked
+               residuals; approximate gradient).
+  backprop     peak O(N s L): ~LINEAR in N — the forward scan stacks every
+               stage's activations as reverse-mode residuals.
+  remat_solve  O(N) forward but O(N s L) inside the backward remat region:
+               ~linear, the paper's baseline scheme.
+
+The growth-factor thresholds are deliberately loose (flat <= FLAT_MAX,
+linear >= LINEAR_MIN at an 8x step growth) so the check pins the
+*asymptotics*, not jax-version-dependent byte constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import GRADIENT_REGISTRY
+
+from .cases import ensure_x64, mlp_field
+from .rules import ERROR, Finding
+from .traversal import dce, peak_resident_bytes
+
+__all__ = ["MemoryRow", "memory_rows", "memory_findings",
+           "memory_table_markdown", "MEMORY_METHODS", "N_SMALL", "N_BIG",
+           "FLAT_MAX", "LINEAR_MIN", "PAPER_BOUNDS", "FLAT_STRATEGIES",
+           "LINEAR_STRATEGIES"]
+
+MEMORY_METHODS: Tuple[str, ...] = ("dopri5", "bosh3")
+N_SMALL, N_BIG = 8, 64            # the acceptance criterion's 8x growth
+DIM, HIDDEN = 4, 256              # small state, wide net: L >> N * state
+
+FLAT_MAX = 1.5                    # "flat within a small constant"
+LINEAR_MIN = 3.0                  # "~linear" at 8x steps (loose on purpose)
+LINEAR_MIN_S1 = 2.0               # single-stage methods (euler): the fixed
+#                                   graph term L dilutes the N-slope, so the
+#                                   linear floor is lower but still > FLAT_MAX
+ORDER_MARGIN = 2.0                # symplectic must beat backprop by >= 2x
+
+FLAT_STRATEGIES = ("symplectic", "remat_step", "adjoint")
+LINEAR_STRATEGIES = ("backprop", "remat_solve")
+
+# the repo's Table-1 mapping (docs/gradients.md notation: N steps, s
+# stages, L network-evaluation graph)
+PAPER_BOUNDS: Dict[str, str] = {
+    "symplectic": "O(N + s + L) — Table 1, proposed method",
+    "backprop": "O(N s L) — Table 1, naive backprop",
+    "remat_step": "O(N + s L) — ACA/ANODE per-step remat",
+    "remat_solve": "O(N) fwd / O(N s L) bwd — Table 1 baseline scheme",
+    "adjoint": "O(L) — Table 1 adjoint (approximate gradient)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryRow:
+    strategy: str
+    method: str
+    n_small: int
+    peak_small: int
+    n_big: int
+    peak_big: int
+
+    @property
+    def growth(self) -> float:
+        return self.peak_big / max(self.peak_small, 1)
+
+
+def _grad_peak_bytes(strategy: str, method: str, n_steps: int,
+                     dim: int = DIM, hidden: int = HIDDEN) -> int:
+    """Peak resident bytes of the reverse-mode jaxpr of one fixed-grid
+    t1 solve (every strategy supports this cell, and fixed-grid reverse
+    mode is legal for all five)."""
+    ensure_x64()
+    field = mlp_field()
+    x0 = jnp.zeros((dim,), jnp.float64)
+    params = {"w1": jnp.zeros((dim, hidden), jnp.float64),
+              "b1": jnp.zeros((hidden,), jnp.float64),
+              "bt": jnp.zeros((hidden,), jnp.float64),
+              "w2": jnp.zeros((hidden, dim), jnp.float64),
+              "b2": jnp.zeros((dim,), jnp.float64)}
+
+    from repro.core import solve
+
+    def loss(x0, params):
+        sol = solve(field, x0, params, method=method, gradient=strategy,
+                    stepping=n_steps, backend="jnp")
+        return jnp.sum(jnp.sin(sol.ys) ** 2)
+
+    closed = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1)))(x0, params)
+    return peak_resident_bytes(dce(closed.jaxpr))
+
+
+def memory_rows(methods: Tuple[str, ...] = MEMORY_METHODS,
+                n_small: int = N_SMALL,
+                n_big: int = N_BIG) -> List[MemoryRow]:
+    rows = []
+    for method in methods:
+        for name in sorted(GRADIENT_REGISTRY):
+            rows.append(MemoryRow(
+                name, method, n_small,
+                _grad_peak_bytes(name, method, n_small),
+                n_big, _grad_peak_bytes(name, method, n_big)))
+    return rows
+
+
+def memory_findings(rows: List[MemoryRow]) -> List[Finding]:
+    """The machine-checked Table-1 ordering."""
+    out = []
+    by = {(r.strategy, r.method): r for r in rows}
+    methods = sorted({r.method for r in rows})
+    for method in methods:
+        for name in FLAT_STRATEGIES:
+            r = by.get((name, method))
+            if r and r.growth > FLAT_MAX:
+                out.append(Finding(
+                    "memory-bound", ERROR, f"{name}/{method}",
+                    f"peak grew {r.growth:.2f}x at {r.n_big // r.n_small}x "
+                    f"steps ({r.peak_small} -> {r.peak_big} B) but "
+                    f"{PAPER_BOUNDS[name]} requires flat (<= {FLAT_MAX}x)"))
+        from repro.core.tableau import get_tableau
+        linear_min = LINEAR_MIN if len(get_tableau(method).b) >= 3 \
+            else LINEAR_MIN_S1
+        for name in LINEAR_STRATEGIES:
+            r = by.get((name, method))
+            if r and r.growth < linear_min:
+                out.append(Finding(
+                    "memory-bound", ERROR, f"{name}/{method}",
+                    f"peak grew only {r.growth:.2f}x at "
+                    f"{r.n_big // r.n_small}x steps ({r.peak_small} -> "
+                    f"{r.peak_big} B): expected ~linear growth "
+                    f"(>= {linear_min}x, {PAPER_BOUNDS[name]}) — the "
+                    "residual accounting lost the stacked buffers"))
+        sym = by.get(("symplectic", method))
+        bp = by.get(("backprop", method))
+        if sym and bp and sym.peak_big * ORDER_MARGIN > bp.peak_big:
+            out.append(Finding(
+                "memory-bound", ERROR, f"symplectic/{method}",
+                f"Table-1 ordering violated at N={sym.n_big}: symplectic "
+                f"peak {sym.peak_big} B is not <= backprop "
+                f"{bp.peak_big} B / {ORDER_MARGIN}"))
+    return out
+
+
+def _fmt_bytes(b: int) -> str:
+    if b >= 1 << 20:
+        return f"{b / 2**20:.2f} MiB"
+    return f"{b / 2**10:.1f} KiB"
+
+
+def memory_table_markdown(rows: List[MemoryRow]) -> str:
+    """The generated docs table (docs/analysis.md)."""
+    lines = [
+        "| strategy | method | peak @ N="
+        f"{rows[0].n_small} | peak @ N={rows[0].n_big} | growth "
+        "| paper bound |",
+        "|----------|--------|------------|-------------|--------"
+        "|-------------|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| `{r.strategy}` | {r.method} | {_fmt_bytes(r.peak_small)} "
+            f"| {_fmt_bytes(r.peak_big)} | {r.growth:.2f}x "
+            f"| {PAPER_BOUNDS.get(r.strategy, '—')} |")
+    return "\n".join(lines)

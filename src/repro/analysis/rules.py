@@ -1,0 +1,195 @@
+"""Pluggable analysis rules over closed jaxprs.
+
+Every rule is a function ``(closed_jaxpr, case_key, **knobs) -> [Finding]``.
+Findings carry a severity: ``error`` findings fail ``--check``; ``warning``
+and ``info`` findings are reported but never gate CI.  The rule catalog is
+documented in docs/analysis.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from .traversal import (aval_bytes, closed_constants, count_eqns, iter_eqns)
+
+__all__ = ["Finding", "RULE_REGISTRY", "register_rule", "dtype_findings",
+           "constant_findings", "donation_findings", "budget_findings",
+           "flatness_findings"]
+
+ERROR, WARNING, INFO = "error", "warning", "info"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str          # "error" | "warning" | "info"
+    case: str              # enumerated-case key or synthetic jaxpr name
+    message: str
+
+    def __str__(self):
+        return f"[{self.severity}] {self.rule} :: {self.case}: {self.message}"
+
+
+RULE_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_rule(name: str):
+    def deco(fn):
+        RULE_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def _is_float(dt) -> bool:
+    return np.issubdtype(np.dtype(dt), np.floating)
+
+
+@register_rule("dtype-discipline")
+def dtype_findings(closed, case: str = "<jaxpr>") -> List[Finding]:
+    """Flag silent float precision changes (``convert_element_type``).
+
+    Demotions (f64 -> f32, f32 -> bf16, ...) are ERRORS anywhere: traced
+    with x64 inputs, a narrowing float convert means some intermediate
+    hardcodes a dtype — the bug class hand-fixed in PRs 2-3 (cnf's f32
+    time embedding, the f32 error norm).  Promotions inside scan/while
+    bodies are WARNINGS (a widening cast per step is a bandwidth smell,
+    e.g. an f32 accumulator repeatedly upcast to f64), except when the
+    destination is exactly f32 — the deliberate >=f32 accumulate idiom for
+    bf16/f16 states (kernels/ref.py).
+    """
+    out = []
+    for eqn, ctx in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        src = np.dtype(eqn.invars[0].aval.dtype)
+        dst = np.dtype(eqn.params.get("new_dtype"))
+        if not (_is_float(src) and _is_float(dst)):
+            continue
+        where = ("inside " + "/".join(ctx.path) if ctx.loop_depth
+                 else "at the top level")
+        if dst.itemsize < src.itemsize:
+            out.append(Finding(
+                "dtype-discipline", ERROR, case,
+                f"float demotion {src} -> {dst} {where} "
+                f"(loop depth {ctx.loop_depth}): an intermediate hardcodes "
+                "a narrower dtype than the state"))
+        elif dst.itemsize > src.itemsize and ctx.loop_depth > 0 \
+                and dst != np.dtype(np.float32):
+            out.append(Finding(
+                "dtype-discipline", WARNING, case,
+                f"float promotion {src} -> {dst} {where} "
+                f"(loop depth {ctx.loop_depth}): widening cast repeats "
+                "every iteration"))
+    return out
+
+
+@register_rule("constant-hazard")
+def constant_findings(closed, case: str = "<jaxpr>",
+                      min_bytes: int = 1 << 20) -> List[Finding]:
+    """Large closed-over array constants (>= ``min_bytes``).
+
+    A big constant baked into the jaxpr is recompile bait (a new trace per
+    value) and ships a copy of the array inside every compiled executable;
+    it should be an argument instead.  WARNING severity — the enumerated
+    probe cases should never trip it, but model code swept through the
+    analyzer legitimately closes over e.g. embedding tables.
+    """
+    out = []
+    for shape, dtype, nbytes in closed_constants(closed):
+        if nbytes >= min_bytes:
+            out.append(Finding(
+                "constant-hazard", WARNING, case,
+                f"closed-over constant {dtype}{list(shape)} "
+                f"({nbytes / 2**20:.1f} MiB >= {min_bytes / 2**20:.1f} MiB):"
+                " pass it as an argument instead of baking it into the "
+                "trace"))
+    return out
+
+
+@register_rule("donation-hazard")
+def donation_findings(closed, case: str = "<jaxpr>",
+                      min_bytes: int = 1 << 16) -> List[Finding]:
+    """Undonated buffer opportunities on an entry point.
+
+    An output whose (shape, dtype) matches an input of >= ``min_bytes``
+    could reuse that input's buffer under ``jax.jit(...,
+    donate_argnums=...)`` — the train-step / solver-state update pattern.
+    INFO severity: a hint for the jit callsite, not a defect in the jaxpr.
+    """
+    out = []
+    in_avals = {}
+    for v in closed.jaxpr.invars:
+        key = (tuple(getattr(v.aval, "shape", ())),
+               str(getattr(v.aval, "dtype", "")))
+        in_avals[key] = in_avals.get(key, 0) + 1
+    matched = 0
+    bytes_total = 0
+    for v in closed.jaxpr.outvars:
+        if hasattr(v, "val"):                       # literal output
+            continue
+        b = aval_bytes(v.aval)
+        key = (tuple(getattr(v.aval, "shape", ())),
+               str(getattr(v.aval, "dtype", "")))
+        if b >= min_bytes and in_avals.get(key, 0) > 0:
+            in_avals[key] -= 1
+            matched += 1
+            bytes_total += b
+    if matched:
+        out.append(Finding(
+            "donation-hazard", INFO, case,
+            f"{matched} output buffer(s) ({bytes_total / 2**10:.0f} KiB) "
+            "match input shapes/dtypes: donating the inputs "
+            "(jit donate_argnums) would reuse their buffers"))
+    return out
+
+
+@register_rule("trace-size-budget")
+def budget_findings(closed, case: str, budgets: Dict[str, int],
+                    kind: str = "value") -> List[Finding]:
+    """Ratchet total eqn count against ``analysis_budgets.json``.
+
+    Over budget is an ERROR (a trace-size regression: some driver started
+    unrolling).  A count under 80% of budget is INFO — re-run
+    ``--write-budgets`` to tighten the ratchet after a deliberate
+    improvement.  A case missing from the committed budgets is an ERROR in
+    --check (new strategies must commit budgets with their PR).
+    """
+    key = f"{case}:{kind}"
+    n = count_eqns(closed.jaxpr)
+    budget = budgets.get(key)
+    if budget is None:
+        return [Finding(
+            "trace-size-budget", ERROR, case,
+            f"no committed budget for {key!r} (count {n}); run "
+            "`python -m repro.analysis --write-budgets` and commit "
+            "analysis_budgets.json")]
+    if n > budget:
+        return [Finding(
+            "trace-size-budget", ERROR, case,
+            f"{kind} jaxpr has {n} eqns > budget {budget}: trace-size "
+            "regression (if intended, re-ratchet with --write-budgets)")]
+    if n < 0.8 * budget:
+        return [Finding(
+            "trace-size-budget", INFO, case,
+            f"{kind} jaxpr has {n} eqns, well under budget {budget}; "
+            "consider tightening with --write-budgets")]
+    return []
+
+
+def flatness_findings(case: str, kind: str, n_small_obs: int, c_small: int,
+                      n_big_obs: int, c_big: int,
+                      tol: float = 1.10) -> List[Finding]:
+    """O(1)-in-observations trace size for the SaveAt drivers: the eqn
+    count at ``n_big_obs`` observation times must stay within ``tol`` of
+    the count at ``n_small_obs`` (the scan-segmented drivers' contract,
+    tests/test_trace_size.py)."""
+    if c_big > tol * c_small:
+        return [Finding(
+            "trace-size-budget", ERROR, case,
+            f"{kind} jaxpr grows with len(ts): {c_small} eqns at "
+            f"{n_small_obs} observations -> {c_big} at {n_big_obs} "
+            f"(> {tol:.2f}x): a SaveAt driver is unrolling over "
+            "observations")]
+    return []

@@ -1,0 +1,244 @@
+"""Jaxpr traversal: the engine every analysis rule walks on.
+
+A traced solve is a nest of jaxprs: the top-level eqn list plus the
+sub-jaxprs closed over by ``scan`` / ``while`` / ``cond`` / ``pjit`` /
+``custom_vjp`` / ``remat`` eqn params.  Sub-jaxprs are discovered by DUCK
+TYPING on the param values (an object with ``.jaxpr`` + ``.consts`` is a
+ClosedJaxpr; one with ``.eqns`` + ``.invars`` is an open Jaxpr; lists and
+tuples are searched elementwise) so the walker keeps working across jax
+versions that move the concrete classes around.
+
+Three accountings are built on the walk:
+
+``count_eqns``          total eqn count across every nesting level — the
+                        trace-size metric ``tests/test_trace_size.py`` pins
+                        and ``analysis_budgets.json`` ratchets.
+``iter_eqns``           flat iterator over (eqn, EqnContext) with the
+                        loop-nesting depth and primitive path — what the
+                        dtype-discipline rule needs to tell a hot-loop
+                        demotion from a one-off cast.
+``peak_resident_bytes`` define-to-last-use liveness over the eqn sequence:
+                        the static analogue of peak HBM residency.  A
+                        ``lax.scan``'s stacked outputs (DirectBackprop's
+                        per-step residuals) surface as (N, ...)-shaped
+                        outvars at the level ABOVE the loop body, so the
+                        paper's Table-1 memory ordering is visible without
+                        running anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+__all__ = ["subjaxprs", "eqn_subjaxprs", "count_eqns", "iter_eqns",
+           "EqnContext", "aval_bytes", "peak_resident_bytes", "dce",
+           "closed_constants", "LOOP_PRIMITIVES"]
+
+# primitives whose sub-jaxprs execute once per iteration — eqns inside them
+# are "hot" for the dtype rule (a demotion there repeats every step)
+LOOP_PRIMITIVES = frozenset({"scan", "while"})
+
+
+def subjaxprs(v) -> List:
+    """Open jaxprs reachable from one eqn param value (duck-typed)."""
+    if hasattr(v, "jaxpr") and hasattr(v, "consts"):    # ClosedJaxpr
+        return [v.jaxpr]
+    if hasattr(v, "eqns") and hasattr(v, "invars"):     # Jaxpr
+        return [v]
+    if isinstance(v, (list, tuple)):
+        out = []
+        for x in v:
+            out.extend(subjaxprs(x))
+        return out
+    return []
+
+
+def eqn_subjaxprs(eqn) -> List:
+    """All sub-jaxprs an eqn closes over (scan/while bodies, cond branches,
+    custom_vjp fwd/bwd, pjit callee, ...)."""
+    out = []
+    for v in eqn.params.values():
+        out.extend(subjaxprs(v))
+    return out
+
+
+def count_eqns(jaxpr) -> int:
+    """Total number of eqns including every nested sub-jaxpr."""
+    n = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for sub in eqn_subjaxprs(eqn):
+            n += count_eqns(sub)
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class EqnContext:
+    """Where an eqn sits in the nest.
+
+    loop_depth — number of enclosing scan/while bodies (> 0 means the eqn
+                 re-executes every iteration: the hot path).
+    path       — primitive names of the enclosing eqns, outermost first.
+    """
+    loop_depth: int = 0
+    path: Tuple[str, ...] = ()
+
+
+def iter_eqns(jaxpr, _depth: int = 0,
+              _path: Tuple[str, ...] = ()) -> Iterator[Tuple[object,
+                                                             EqnContext]]:
+    """Yield (eqn, EqnContext) for every eqn at every nesting level."""
+    ctx = EqnContext(loop_depth=_depth, path=_path)
+    for eqn in jaxpr.eqns:
+        yield eqn, ctx
+        prim = eqn.primitive.name
+        depth = _depth + (1 if prim in LOOP_PRIMITIVES else 0)
+        for sub in eqn_subjaxprs(eqn):
+            yield from iter_eqns(sub, depth, _path + (prim,))
+
+
+def _is_var(atom) -> bool:
+    """Var vs Literal, duck-typed (Literals carry ``.val``)."""
+    return not hasattr(atom, "val")
+
+
+def aval_bytes(aval) -> int:
+    """Bytes of one abstract value; 0 for non-array avals."""
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        try:
+            n *= int(d)
+        except TypeError:           # symbolic / polymorphic dim
+            return 0
+    return n * np.dtype(dtype).itemsize
+
+
+def _inner_extra_bytes(eqn) -> int:
+    """Extra residency one execution of an eqn's sub-jaxprs adds on top of
+    the caller's live set.  The sub-jaxpr's own inputs are (conservatively)
+    treated as aliases of the caller's operand buffers already counted in
+    the caller's live set, so only residency beyond the inputs counts.
+    Alternative sub-jaxprs (cond branches, custom_vjp fwd/bwd) take the max
+    — one of them runs at a time."""
+    best = 0
+    for sub in eqn_subjaxprs(eqn):
+        inputs = sum(aval_bytes(v.aval)
+                     for v in list(sub.invars) + list(sub.constvars))
+        best = max(best, peak_resident_bytes(sub) - inputs)
+    return max(best, 0)
+
+
+def peak_resident_bytes(jaxpr) -> int:
+    """Peak resident bytes of one execution under define-to-last-use
+    liveness.
+
+    Model: a var's buffer is live from the eqn that defines it (inputs and
+    constvars from entry) to its last use (jaxpr outputs to exit); at each
+    eqn the cost is the live set plus the extra internal residency of the
+    eqn's sub-jaxprs (``_inner_extra_bytes`` — a scan body's cost recurs
+    per iteration but never exceeds its single-iteration peak).  This is a
+    fusion-free upper-bound shape of what XLA allocates; its value is the
+    *scaling*, which is exact: stacked scan residuals appear as (N, ...)
+    outvars, so O(N·s·L) vs O(N + s + L) strategies separate statically.
+    """
+    eqns = list(jaxpr.eqns)
+    n = len(eqns)
+    boundary = list(jaxpr.invars) + list(jaxpr.constvars)
+    if n == 0:
+        return sum(aval_bytes(v.aval) for v in boundary)
+
+    defs = {}                      # var -> defining position (-1 = input)
+    last = {}                      # var -> last-use position (n = output)
+    for v in boundary:
+        defs[v] = -1
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if _is_var(v):
+                last[v] = i
+        for v in eqn.outvars:
+            defs[v] = i
+    for v in jaxpr.outvars:
+        if _is_var(v):
+            last[v] = n
+
+    alloc = [0] * n                # bytes becoming live at eqn i
+    free = [0] * (n + 1)           # bytes dying after eqn i
+    entry = 0
+    for v, d in defs.items():
+        b = aval_bytes(v.aval)
+        if not b:
+            continue
+        if d < 0:
+            entry += b
+            # unused inputs still occupy their buffers for the whole call
+            end = last.get(v, n)
+        else:
+            alloc[d] += b
+            end = last.get(v, d)   # unused outputs die immediately
+        if end < n:
+            free[end] += b
+
+    cur = entry
+    peak = cur
+    for i, eqn in enumerate(eqns):
+        cur += alloc[i]
+        peak = max(peak, cur + _inner_extra_bytes(eqn))
+        cur -= free[i]
+    return peak
+
+
+def dce(jaxpr):
+    """Best-effort dead-code elimination before liveness accounting.
+
+    XLA is guaranteed to drop unused scan outputs (e.g. the checkpoint
+    trajectory ``rk_solve_fixed`` stacks but a caller never reads), so a
+    residency model that counts them reports phantom buffers — the
+    continuous adjoint's backward solve would look O(N·L) instead of O(L).
+    Falls back to the raw jaxpr if the partial_eval API moves.
+    """
+    try:
+        from jax.interpreters.partial_eval import dce_jaxpr
+    except Exception:                           # pragma: no cover
+        return jaxpr
+    pruned, _ = dce_jaxpr(jaxpr, [True] * len(jaxpr.outvars))
+    return pruned
+
+
+def closed_constants(closed) -> List[Tuple[Tuple[int, ...], str, int]]:
+    """(shape, dtype, nbytes) of every array constant a ClosedJaxpr closes
+    over, including nested ClosedJaxprs (scan bodies etc.)."""
+    out = []
+    seen = set()
+
+    def visit_value(v):
+        if hasattr(v, "jaxpr") and hasattr(v, "consts"):
+            visit_closed(v)
+        elif hasattr(v, "eqns") and hasattr(v, "invars"):
+            visit_open(v)
+        elif isinstance(v, (list, tuple)):
+            for x in v:
+                visit_value(x)
+
+    def visit_closed(c):
+        if id(c) in seen:
+            return
+        seen.add(id(c))
+        for const in c.consts:
+            if hasattr(const, "shape") and hasattr(const, "dtype"):
+                out.append((tuple(const.shape), str(const.dtype),
+                            int(np.prod(const.shape, dtype=np.int64))
+                            * np.dtype(const.dtype).itemsize))
+        visit_open(c.jaxpr)
+
+    def visit_open(j):
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                visit_value(v)
+
+    visit_closed(closed)
+    return out

@@ -28,7 +28,11 @@ elementwise pass) or to the Pallas kernel
 
   auto    — Pallas on TPU backends, jnp elsewhere                    [default]
   jnp     — always the jnp oracle (dtype-preserving; exact in f64)
-  pallas  — always the Pallas kernel (interpret mode off-TPU; f32 accumulate)
+  pallas  — always the Pallas kernel (interpret mode off-TPU)
+
+Both backends accumulate in ``promote_types(state_dtype, float32)``: >= f32
+for low-precision states, f64 for f64 states — so x64 exact-gradient tests
+hold on either backend.
 
 For the backward recursion the h-dependence of the paper's Eq. (7)/(8)
 coefficients (btilde_j = b_j, or h_n for the I0 = {i : b_i = 0} stages) is
@@ -236,10 +240,15 @@ class StageCombiner:
         leaves_K = treedef.flatten_up_to(K)
         if self.backend == "pallas":
             assert idx is None, "row pruning is a jnp-backend optimization"
-            hc = (jnp.asarray(h, jnp.float32)
-                  * jnp.asarray(coefs, jnp.float32))
-            out = [_fused_axpy(lb, lk, hc)
-                   for lb, lk in zip(leaves_b, leaves_K)]
+            # coefficient row in the kernel's per-leaf accumulation dtype
+            # (>= f32, f64 for f64 leaves): an f32 row under x64 would
+            # demote the tableau coefficients the kernel multiplies by.
+            out = []
+            for lb, lk in zip(leaves_b, leaves_K):
+                acc_dt = jnp.promote_types(lb.dtype, jnp.float32)
+                hc = jnp.asarray(h, acc_dt) * jnp.asarray(coefs).astype(
+                    acc_dt)
+                out.append(_fused_axpy(lb, lk, hc))
         else:
             out = [self._combine_leaf_jnp(lb, lk, coefs, h, idx)
                    for lb, lk in zip(leaves_b, leaves_K)]
@@ -283,9 +292,10 @@ class StageCombiner:
         outs = [[] for _ in range(m)]
         for lx, lk in zip(leaves_x, leaves_K):
             if self.backend == "pallas":
-                hc = (jnp.asarray(h, jnp.float32)
-                      * jnp.asarray(rows, jnp.float32))
-                sc = jnp.asarray(base_scale, jnp.float32)
+                acc_dt = jnp.promote_types(lx.dtype, jnp.float32)
+                hc = (jnp.asarray(h, acc_dt)
+                      * jnp.asarray(rows).astype(acc_dt))
+                sc = jnp.asarray(base_scale).astype(acc_dt)
                 o = _fused_axpy_rows(lx, lk, hc, sc)
                 for r in range(m):
                     outs[r].append(o[r])

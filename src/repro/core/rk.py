@@ -196,7 +196,10 @@ def _error_norm(err, x, x_next, rtol, atol):
     total, count = 0.0, 0
     for e, a, b in leaves:
         scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
-        r = (e / scale).astype(jnp.float32)
+        # accumulate in >= f32 but NEVER below the state dtype: an f32 norm
+        # under x64 quantizes the accept/reject decisions of an f64 solve
+        # (caught by the repro.analysis dtype rule).
+        r = (e / scale).astype(jnp.promote_types(e.dtype, jnp.float32))
         total = total + jnp.sum(r * r)
         count += r.size
     return jnp.sqrt(total / count)

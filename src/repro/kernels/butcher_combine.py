@@ -27,9 +27,11 @@ Tiling: the state is reshaped to (rows, 128) lanes; each grid step processes
 a (block_rows, 128) tile of x and the matching (s, block_rows, 128) tile of
 ks — the (8, 128) float32 VREG layout and VMEM budget set block_rows.
 
-Accumulation is float32, strictly in stage order i = 0..s-1 — the jnp
-oracles in ref.py use the identical order, so interpret-mode kernel runs
-match the oracles bit-for-bit (asserted in tests).
+Accumulation is ``promote_types(x.dtype, float32)`` (f32 for f32/bf16
+states, f64 for f64 states under x64), strictly in stage order
+i = 0..s-1 — the jnp oracles in ref.py use the identical dtype and order,
+so interpret-mode kernel runs match the oracles bit-for-bit (asserted in
+tests).
 """
 from __future__ import annotations
 
@@ -55,12 +57,10 @@ def _pad_to_tiles(x, ks, block_rows):
     return xf, kf, rows_pad, n
 
 
-def _kernel(coef_ref, x_ref, ks_ref, o_ref, *, s: int):
-    x = x_ref[...].astype(jnp.float32)
-    acc = x
+def _kernel(coef_ref, x_ref, ks_ref, o_ref, *, s: int, acc_dt):
+    acc = x_ref[...].astype(acc_dt)
     for i in range(s):  # unrolled: s is a small static constant (<= 13)
-        acc = acc + coef_ref[i].astype(jnp.float32) * \
-            ks_ref[i].astype(jnp.float32)
+        acc = acc + coef_ref[i].astype(acc_dt) * ks_ref[i].astype(acc_dt)
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
@@ -74,11 +74,12 @@ def butcher_combine_pallas(x: jnp.ndarray, ks: jnp.ndarray,
     s = ks.shape[0]
     orig_shape = x.shape
     xf, kf, rows_pad, n = _pad_to_tiles(x, ks, block_rows)
-    hc = (h * coefs).astype(jnp.float32)
+    acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+    hc = (h * coefs).astype(acc_dt)
 
     grid = (rows_pad // block_rows,)
     out = pl.pallas_call(
-        functools.partial(_kernel, s=s),
+        functools.partial(_kernel, s=s, acc_dt=acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((s,), lambda r: (0,)),                 # coefs
@@ -94,13 +95,13 @@ def butcher_combine_pallas(x: jnp.ndarray, ks: jnp.ndarray,
 
 
 def _rows_kernel(coef_ref, scale_ref, x_ref, ks_ref, o_ref,
-                 *, s: int, m: int):
-    x = x_ref[...].astype(jnp.float32)
+                 *, s: int, m: int, acc_dt):
+    x = x_ref[...].astype(acc_dt)
     for r in range(m):  # unrolled: m is tiny (2 for update+error)
-        acc = scale_ref[r].astype(jnp.float32) * x
+        acc = scale_ref[r].astype(acc_dt) * x
         for i in range(s):
-            acc = acc + coef_ref[r, i].astype(jnp.float32) * \
-                ks_ref[i].astype(jnp.float32)
+            acc = acc + coef_ref[r, i].astype(acc_dt) * \
+                ks_ref[i].astype(acc_dt)
         o_ref[r, :, :] = acc.astype(o_ref.dtype)
 
 
@@ -118,12 +119,13 @@ def butcher_combine_rows_pallas(x: jnp.ndarray, ks: jnp.ndarray,
     m = coefs.shape[0]
     orig_shape = x.shape
     xf, kf, rows_pad, n = _pad_to_tiles(x, ks, block_rows)
-    hc = (h * coefs).astype(jnp.float32)
-    sc = base_scale.astype(jnp.float32)
+    acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+    hc = (h * coefs).astype(acc_dt)
+    sc = base_scale.astype(acc_dt)
 
     grid = (rows_pad // block_rows,)
     out = pl.pallas_call(
-        functools.partial(_rows_kernel, s=s, m=m),
+        functools.partial(_rows_kernel, s=s, m=m, acc_dt=acc_dt),
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, s), lambda r: (0, 0)),              # coefs

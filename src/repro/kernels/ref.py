@@ -17,14 +17,17 @@ def butcher_combine_ref(x: jnp.ndarray, ks: jnp.ndarray,
     """x + h * sum_i coefs[i] * ks[i].
 
     x: (...,), ks: (s, ...), coefs: (s,). The RK stage-combination hot loop
-    (Eq. 5) fused into a single HBM pass.  Accumulates in float32 strictly
-    in stage order — the exact sequence the Pallas kernel executes, so
-    interpret-mode kernel runs match this oracle bit-for-bit.
+    (Eq. 5) fused into a single HBM pass.  Accumulates in
+    promote_types(x.dtype, float32) — >= f32 for low-precision states, f64
+    for f64 states — strictly in stage order: the exact dtype and sequence
+    the Pallas kernel executes, so interpret-mode kernel runs match this
+    oracle bit-for-bit.
     """
-    hc = (h * coefs).astype(jnp.float32)
-    acc = x.astype(jnp.float32)
+    acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+    hc = (h * coefs).astype(acc_dt)
+    acc = x.astype(acc_dt)
     for i in range(ks.shape[0]):
-        acc = acc + hc[i] * ks[i].astype(jnp.float32)
+        acc = acc + hc[i] * ks[i].astype(acc_dt)
     return acc.astype(x.dtype)
 
 
@@ -34,17 +37,18 @@ def butcher_combine_rows_ref(x: jnp.ndarray, ks: jnp.ndarray,
     """Multi-row combine: out[r] = base_scale[r]*x + h*sum_i coefs[r,i]*ks[i].
 
     x: (...,), ks: (s, ...), coefs: (m, s), base_scale: (m,).  Returns
-    (m,) + x.shape.  Same f32 stage-order accumulation as the Pallas kernel
-    (bit-for-bit in interpret mode).
+    (m,) + x.shape.  Same promote_types(x.dtype, f32) stage-order
+    accumulation as the Pallas kernel (bit-for-bit in interpret mode).
     """
-    hc = (h * coefs).astype(jnp.float32)
-    sc = base_scale.astype(jnp.float32)
-    xf = x.astype(jnp.float32)
+    acc_dt = jnp.promote_types(x.dtype, jnp.float32)
+    hc = (h * coefs).astype(acc_dt)
+    sc = base_scale.astype(acc_dt)
+    xf = x.astype(acc_dt)
     outs = []
     for r in range(coefs.shape[0]):
         acc = sc[r] * xf
         for i in range(ks.shape[0]):
-            acc = acc + hc[r, i] * ks[i].astype(jnp.float32)
+            acc = acc + hc[r, i] * ks[i].astype(acc_dt)
         outs.append(acc.astype(x.dtype))
     return jnp.stack(outs)
 

@@ -19,6 +19,18 @@ from typing import Dict
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30  # v5e: 16 GiB
+
+
+def hbm_headroom(peak_bytes: float) -> Dict[str, float]:
+    """Per-chip HBM fit for a peak-residency estimate.
+
+    Works on either source of truth: ``compiled.memory_analysis()`` sums
+    from a dry-run compile, or the static liveness peaks from
+    ``repro.analysis`` (dryrun ``--analysis`` mode, no compile at all).
+    """
+    frac = peak_bytes / HBM_PER_CHIP
+    return {"hbm_fraction": round(frac, 6), "fits": frac <= 1.0}
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -1,5 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+if "--analysis" not in sys.argv:
+    # 512 virtual devices for the production-mesh compile cells.  The
+    # --analysis mode never builds a mesh — it only traces jaxprs — and
+    # must not pay the 512-device backend startup cost.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -15,10 +21,17 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
         --shape train_4k [--multipod] [--out runs/dryrun.jsonl] \
         [--node-mode] [--ep] [--all]
+
+``--analysis`` switches to a compile-free mode: the repro.analysis static
+auditor traces every gradient strategy under the integrators the named
+configs use (NODE depth stack, CNF) and prints the per-strategy Table-1
+memory table — answers "which grad_mode fits?" without executing a solve:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --analysis \
+        [--analysis-config node,cnf] [--out runs/analysis.jsonl]
 """
 import argparse
 import json
-import sys
 import time
 import traceback
 from typing import Optional
@@ -32,8 +45,8 @@ from repro.configs import SHAPES, get_arch
 from repro.configs.base import ArchConfig, NodeConfig, ShapeConfig
 from repro.configs.registry import ARCH_IDS, cell_is_applicable
 from repro.launch.analysis import (bf16_upcast_bytes, collective_bytes,
-                                   count_params, model_flops_per_step,
-                                   roofline_terms)
+                                   count_params, hbm_headroom,
+                                   model_flops_per_step, roofline_terms)
 from repro.launch.mesh import make_production_mesh
 from repro.models.encdec import init_encdec_caches
 from repro.models.lm import init_caches
@@ -256,6 +269,11 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
                                   + mem.temp_size_in_bytes
                                   - mem.alias_size_in_bytes
                                   - upcast) / 2**30, 3),
+        "hbm_headroom": hbm_headroom(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes
+                                     - upcast),
         "flops_per_device": flops_dev,
         "flops_per_device_raw": flops_raw,
         "bytes_accessed_per_device": bytes_dev,
@@ -415,6 +433,70 @@ def active_params(arch: ArchConfig, n_params: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# static analysis mode (--analysis): no mesh, no compile, no solve
+# ---------------------------------------------------------------------------
+
+ANALYSIS_CONFIGS = ("node", "cnf")
+
+
+def run_static_analysis(targets=ANALYSIS_CONFIGS, out=None,
+                        verbose: bool = True) -> list:
+    """Per-strategy memory audit of the named model configs, statically.
+
+    For each named config this reads off the integrator it actually uses
+    (configs/base.py NodeConfig for the NODE depth stack, models/cnf.py
+    CNFConfig for the CNF likelihood solves), then asks ``repro.analysis``
+    for the Table-1 memory table of EVERY registered gradient strategy
+    under that integrator: reverse-mode jaxprs are traced at N and 8N
+    fixed steps and walked with the define-to-last-use liveness
+    accounting.  Nothing is compiled or executed — this answers "which
+    grad_mode can this config afford?" in seconds on the login node.
+    """
+    from repro.analysis.memory import (memory_findings, memory_rows,
+                                       memory_table_markdown)
+    from repro.models.cnf import CNFConfig
+
+    methods = {}
+    if "node" in targets:
+        methods.setdefault(NodeConfig().method, []).append("node")
+    if "cnf" in targets:
+        methods.setdefault(CNFConfig(dim=4).method, []).append("cnf")
+    if not methods:
+        raise SystemExit(f"--analysis: no known config in {targets!r}; "
+                         f"have {ANALYSIS_CONFIGS}")
+
+    rows = memory_rows(methods=tuple(sorted(methods)))
+    findings = memory_findings(rows)
+    results = []
+    for r in rows:
+        head = hbm_headroom(r.peak_big)
+        results.append({"mode": "static_analysis",
+                        "configs": methods[r.method],
+                        "strategy": r.strategy, "method": r.method,
+                        "peak_bytes_small": r.peak_small,
+                        "peak_bytes_big": r.peak_big,
+                        "n_small": r.n_small, "n_big": r.n_big,
+                        "growth": round(r.growth, 3), **head})
+    if verbose:
+        used = ", ".join(f"{m} <- {'+'.join(cs)}"
+                         for m, cs in sorted(methods.items()))
+        print(f"static per-strategy memory audit (integrators: {used})")
+        print(memory_table_markdown(rows))
+        for f in findings:
+            print(str(f))
+    if out:
+        with open(out, "a") as fh:
+            for res in results:
+                fh.write(json.dumps(res) + "\n")
+    if findings:
+        print(f"FAILED: {len(findings)} memory-bound findings",
+              file=sys.stderr)
+        sys.exit(1)
+    print("static analysis OK")
+    return results
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -442,8 +524,19 @@ def main(argv=None):
     ap.add_argument("--no-correction", action="store_true",
                     help="skip the trip-count cost correction (faster; "
                          "use for the multipod shardability pass)")
+    ap.add_argument("--analysis", action="store_true",
+                    help="static per-strategy memory audit (repro.analysis)"
+                         " of the named configs — no mesh, no compile")
+    ap.add_argument("--analysis-config", default=",".join(ANALYSIS_CONFIGS),
+                    help="comma list of configs for --analysis: node, cnf")
     ap.add_argument("--out", default=None, help="append JSONL here")
     args = ap.parse_args(argv)
+
+    if args.analysis:
+        run_static_analysis(
+            tuple(t for t in args.analysis_config.split(",") if t),
+            out=args.out)
+        return
 
     cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
     meshes = [False, True] if args.both_meshes else [args.multipod]

@@ -71,7 +71,10 @@ def init_cnf(key, cfg: CNFConfig, dtype=jnp.float32):
 
 def _dynamics(net, x, t):
     """concatsquash MLP; x: (B, dim) -> (B, dim)."""
-    tt = jnp.reshape(t, (1, 1)).astype(jnp.float32)
+    # the time embedding must ride in the STATE dtype: a hardcoded f32
+    # here demotes every gate/bias product of an f64 solve under x64
+    # (same bug class as the dlp-dtype fix in cnf_forward)
+    tt = jnp.reshape(t, (1, 1)).astype(x.dtype)
     h = x
     for i, lp in enumerate(net):
         h = h @ lp["w"] * jax.nn.sigmoid(tt @ lp["wt_gate"]) + \

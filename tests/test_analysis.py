@@ -1,0 +1,396 @@
+"""Tests for the repro.analysis static auditor.
+
+Three layers:
+
+  * rule unit tests on tiny SYNTHETIC jaxprs with known properties — a
+    scan with a known stacked-output size, a planted
+    ``convert_element_type`` demotion, an oversized closed-over constant —
+    so each rule's trigger condition is pinned independently of the
+    solver stack;
+  * regression tests for the dtype findings the auditor's first sweep
+    surfaced in real code (the f32 error norm in core/rk.py, the f32 time
+    embedding in models/cnf.py, the f32 kernel accumulators): the traces
+    must stay clean, and the f64 kernel path must now accumulate in f64;
+  * end-to-end probes over every registered gradient strategy, including
+    a fast memory-scaling check (the full Table-1 audit is the CI
+    ``python -m repro.analysis --check`` lane).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.analysis import (BUDGET_PATH, Case, aval_bytes, budget_findings,
+                            case_jaxprs, constant_findings, count_eqns, dce,
+                            donation_findings, dtype_findings,
+                            enumerate_cases, flatness_findings, iter_eqns,
+                            peak_resident_bytes)
+from repro.analysis.memory import _grad_peak_bytes
+from repro.core.api import GRADIENT_REGISTRY
+
+F64 = jnp.float64
+
+
+# ---------------------------------------------------------------------------
+# traversal on synthetic jaxprs
+# ---------------------------------------------------------------------------
+
+def test_count_eqns_flat():
+    closed = jax.make_jaxpr(lambda x: x + 1.0)(jnp.zeros((2,), F64))
+    assert count_eqns(closed.jaxpr) == 1
+
+
+def test_count_eqns_includes_scan_body():
+    def f(x):
+        def body(c, _):
+            return jnp.sin(c) * 2.0 + 1.0, None
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((2,), F64))
+    top = len(closed.jaxpr.eqns)
+    # the 3-eqn body is counted once (scan traces its body once), on top
+    # of the top-level eqns
+    assert count_eqns(closed.jaxpr) > top
+
+
+def test_iter_eqns_loop_depth_and_path():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        c, _ = jax.lax.scan(body, x, None, length=5)
+        return c + 1.0
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((2,), F64))
+    depths = {}
+    for eqn, ctx in iter_eqns(closed.jaxpr):
+        depths.setdefault(ctx.loop_depth, []).append((eqn.primitive.name,
+                                                      ctx.path))
+    assert 0 in depths and 1 in depths
+    # every depth-1 eqn sits under the scan
+    assert all(path and path[-1] == "scan" for _, path in depths[1])
+
+
+def test_aval_bytes():
+    closed = jax.make_jaxpr(lambda x: x)(jnp.zeros((3, 5), F64))
+    assert aval_bytes(closed.jaxpr.invars[0].aval) == 3 * 5 * 8
+
+
+# ---------------------------------------------------------------------------
+# liveness accounting: known scan carry / stacked-output sizes
+# ---------------------------------------------------------------------------
+
+def _stacking_scan(n, d=128):
+    """Stacks an (n, d) f64 trajectory: peak must include n*d*8 bytes."""
+    def f(x):
+        def body(c, _):
+            c = c * 2.0
+            return c, c
+        _, ys = jax.lax.scan(body, x, None, length=n)
+        return ys
+    return jax.make_jaxpr(f)(jnp.zeros((d,), F64))
+
+
+def _carry_only_scan(n, d=128):
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        c, _ = jax.lax.scan(body, x, None, length=n)
+        return c
+    return jax.make_jaxpr(f)(jnp.zeros((d,), F64))
+
+
+def test_peak_includes_stacked_output():
+    n, d = 16, 128
+    peak = peak_resident_bytes(_stacking_scan(n, d).jaxpr)
+    assert peak >= n * d * 8
+
+
+def test_peak_scaling_stacked_vs_carry_only():
+    grow_stack = (peak_resident_bytes(_stacking_scan(64).jaxpr)
+                  / peak_resident_bytes(_stacking_scan(8).jaxpr))
+    grow_carry = (peak_resident_bytes(_carry_only_scan(64).jaxpr)
+                  / peak_resident_bytes(_carry_only_scan(8).jaxpr))
+    assert grow_stack > 4.0          # ~8x modulo the fixed carry term
+    assert grow_carry < 1.1          # flat: length never enters the peak
+
+
+def test_dce_drops_unused_stacked_output():
+    """rk_solve_fixed always stacks checkpoints; when a caller (the
+    continuous adjoint's backward) only reads x_final, XLA drops the
+    stacked buffer — the liveness model must too, or O(L) strategies look
+    O(N L)."""
+    n, d = 32, 256
+
+    def f(x):
+        def body(c, _):
+            c = c * 2.0
+            return c, c
+        c, ys = jax.lax.scan(body, x, None, length=n)
+        return c                       # ys is dead
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((d,), F64))
+    raw = peak_resident_bytes(closed.jaxpr)
+    pruned = peak_resident_bytes(dce(closed.jaxpr))
+    assert raw >= n * d * 8            # the dead stack is counted raw...
+    assert pruned < n * d * 8          # ...and gone after DCE
+
+
+# ---------------------------------------------------------------------------
+# dtype-discipline rule on planted casts
+# ---------------------------------------------------------------------------
+
+def test_dtype_demotion_in_loop_is_error():
+    def f(x):
+        def body(c, _):
+            return (c.astype(jnp.float32) * 2).astype(F64), None
+        c, _ = jax.lax.scan(body, x, None, length=4)
+        return c
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4,), F64))
+    fs = dtype_findings(closed, "planted")
+    errors = [f for f in fs if f.severity == "error"]
+    warnings = [f for f in fs if f.severity == "warning"]
+    assert len(errors) == 1 and "float64" in errors[0].message \
+        and "float32" in errors[0].message
+    # the cast back up (f32 -> f64, inside the loop, dst != f32) warns
+    assert len(warnings) == 1
+
+
+def test_dtype_demotion_at_top_level_is_error_too():
+    closed = jax.make_jaxpr(
+        lambda x: x.astype(jnp.float32))(jnp.zeros((4,), F64))
+    fs = dtype_findings(closed, "planted")
+    assert [f.severity for f in fs] == ["error"]
+    assert "top level" in fs[0].message
+
+
+def test_dtype_f32_accumulate_idiom_not_flagged():
+    """bf16 state upcast to exactly f32 inside a loop is the deliberate
+    kernel accumulation idiom (kernels/ref.py), not a finding."""
+    def f(x):
+        def body(c, _):
+            return c, c.astype(jnp.float32)
+        _, ys = jax.lax.scan(body, x, None, length=4)
+        return ys
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4,), jnp.bfloat16))
+    assert dtype_findings(closed, "idiom") == []
+
+
+def test_dtype_rule_reproduces_the_f32_error_norm_bug():
+    """The bug class the first analyzer sweep found in core/rk.py's
+    adaptive driver: an f64 solve whose accept/reject norm was computed
+    through a hardcoded .astype(float32) inside the while loop."""
+    def solve_like(x):
+        def cond(s):
+            x, i = s
+            err = jnp.sqrt(jnp.mean((x / 2.0).astype(jnp.float32) ** 2))
+            return (err.astype(x.dtype) < 1e3) & (i < 5)
+
+        def body(s):
+            x, i = s
+            return x * 1.1, i + 1
+
+        return jax.lax.while_loop(cond, body, (x, 0))[0]
+
+    closed = jax.make_jaxpr(solve_like)(jnp.zeros((4,), F64))
+    errors = [f for f in dtype_findings(closed, "pre-fix")
+              if f.severity == "error"]
+    assert errors, "the planted f32 norm demotion must be detected"
+    assert any("while" in f.message for f in errors)
+
+
+# ---------------------------------------------------------------------------
+# hazard rules
+# ---------------------------------------------------------------------------
+
+def test_constant_rule_flags_oversized_closure():
+    big = np.ones((1 << 18,), np.float32)          # exactly 1 MiB
+
+    def f(x):
+        return x + jnp.asarray(big)[0]
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((), jnp.float32))
+    fs = constant_findings(closed, "big")
+    assert len(fs) == 1 and fs[0].severity == "warning"
+    assert "1.0 MiB" in fs[0].message
+
+
+def test_constant_rule_ignores_small_closure():
+    small = np.ones((8,), np.float32)
+    closed = jax.make_jaxpr(
+        lambda x: x + jnp.asarray(small)[0])(jnp.zeros((), jnp.float32))
+    assert constant_findings(closed, "small") == []
+
+
+def test_donation_rule_matches_state_update_shape():
+    x = jnp.zeros((1 << 14,), F64)                 # 128 KiB state
+    fs = donation_findings(jax.make_jaxpr(lambda x: x * 2.0)(x), "upd")
+    assert len(fs) == 1 and fs[0].severity == "info"
+    tiny = jnp.zeros((4,), F64)
+    assert donation_findings(
+        jax.make_jaxpr(lambda x: x * 2.0)(tiny), "tiny") == []
+
+
+# ---------------------------------------------------------------------------
+# budget ratchet + flatness
+# ---------------------------------------------------------------------------
+
+def test_budget_rule_ratchet():
+    closed = jax.make_jaxpr(
+        lambda x: jnp.sin(x) + 1.0)(jnp.zeros((2,), F64))
+    n = count_eqns(closed.jaxpr)
+    ok = budget_findings(closed, "c", {"c:value": n}, "value")
+    assert ok == []
+    over = budget_findings(closed, "c", {"c:value": n - 1}, "value")
+    assert [f.severity for f in over] == ["error"]
+    missing = budget_findings(closed, "c", {}, "value")
+    assert [f.severity for f in missing] == ["error"]
+    slack = budget_findings(closed, "c", {"c:value": 100 * n}, "value")
+    assert [f.severity for f in slack] == ["info"]
+
+
+def test_flatness_rule():
+    assert flatness_findings("c", "value", 4, 100, 32, 105) == []
+    bad = flatness_findings("c", "value", 4, 100, 32, 800)
+    assert [f.severity for f in bad] == ["error"]
+    assert "unrolling" in bad[0].message
+
+
+def test_committed_budgets_cover_every_enumerated_case():
+    """analysis_budgets.json must have exactly one entry per traced jaxpr
+    of the current registry — a newly registered strategy or capability
+    without a committed budget fails here before it fails in CI."""
+    budgets = json.loads(BUDGET_PATH.read_text())
+    expected = set()
+    for case in enumerate_cases(("dopri5",)):
+        expected.add(f"{case.key}:value")
+        if case.differentiable:
+            expected.add(f"{case.key}:grad")
+    assert set(budgets) == expected
+    assert all(isinstance(v, int) and v > 0 for v in budgets.values())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over the registry
+# ---------------------------------------------------------------------------
+
+def test_enumerate_cases_covers_all_strategies():
+    cases = enumerate_cases(("dopri5",))
+    assert {c.strategy for c in cases} == set(GRADIENT_REGISTRY)
+    keys = [c.key for c in cases]
+    assert len(keys) == len(set(keys))
+    # every strategy has the universal fixed/t1 reverse-differentiable cell
+    for name in GRADIENT_REGISTRY:
+        assert Case(name, "fixed", "t1", False) in cases
+
+
+@pytest.mark.parametrize("strategy", sorted(GRADIENT_REGISTRY))
+def test_strategy_fixed_grad_trace_is_dtype_clean(strategy):
+    """The real solver stack, per strategy: tracing the reverse-mode
+    jaxpr of a fixed-grid f64 solve must produce zero dtype findings
+    (this is the regression fence for the error-norm / combine / kernel
+    dtype fixes)."""
+    jaxprs = case_jaxprs(Case(strategy, "fixed", "t1", False))
+    for kind in ("value", "grad"):
+        closed = jaxprs[kind]
+        assert closed is not None
+        assert dtype_findings(closed, f"{strategy}:{kind}") == []
+        assert constant_findings(closed, f"{strategy}:{kind}") == []
+
+
+@pytest.mark.parametrize("strategy", ["adjoint", "backprop", "symplectic"])
+def test_adaptive_trace_is_dtype_clean(strategy):
+    """The adaptive while-loop drivers — where the f32 error norm lived
+    pre-fix — must trace clean under x64."""
+    jaxprs = case_jaxprs(Case(strategy, "adaptive", "t1", False))
+    for kind in ("value", "grad"):
+        closed = jaxprs[kind]
+        if closed is None:
+            continue
+        errors = [f for f in dtype_findings(closed, strategy)
+                  if f.severity == "error"]
+        assert errors == []
+
+
+def test_cnf_forward_trace_is_dtype_clean_f64():
+    """models/cnf.py regression: the concatsquash time embedding rides in
+    the state dtype (pre-fix it hardcoded f32, demoting every gate/bias
+    product of an f64 solve)."""
+    from repro.models.cnf import CNFConfig, cnf_forward, init_cnf
+
+    cfg = CNFConfig(dim=3, hidden=(8,), n_components=1, n_steps=2,
+                    trace="exact", method="bosh3", grad_mode="backprop",
+                    combine_backend="jnp")
+    params = init_cnf(jax.random.PRNGKey(0), cfg, dtype=F64)
+    u = jnp.zeros((2, 3), F64)
+    eps = jnp.ones((2, 3), F64)
+    closed = jax.make_jaxpr(lambda p: cnf_forward(p, u, eps, cfg))(params)
+    errors = [f for f in dtype_findings(closed, "cnf")
+              if f.severity == "error"]
+    assert errors == []
+
+
+def test_butcher_combine_accumulates_f64():
+    """kernels regression: the stage combine must accumulate f64 states in
+    f64 (pre-fix both the Pallas kernels and the jnp oracles hardcoded an
+    f32 accumulator, quantizing every f64 step update to ~1e-8)."""
+    from repro.kernels.ops import butcher_combine, butcher_combine_rows
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(257,)), F64)
+    ks = jnp.asarray(rng.normal(size=(7, 257)), F64)
+    coefs = jnp.asarray(rng.normal(size=(7,)), F64)
+    h = jnp.asarray(0.01, F64)
+    want = np.asarray(x, np.float64) + 0.01 * np.einsum(
+        "s,sd->d", np.asarray(coefs, np.float64), np.asarray(ks, np.float64))
+    for use_pallas in (False, True):
+        got = butcher_combine(x, ks, coefs, h, use_pallas=use_pallas)
+        assert got.dtype == np.float64
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-14, atol=1e-14)
+
+    rows = jnp.asarray(rng.normal(size=(2, 7)), F64)
+    scale = jnp.asarray([1.0, 0.0], F64)
+    want_rows = (np.asarray(scale, np.float64)[:, None]
+                 * np.asarray(x, np.float64)[None]
+                 + 0.01 * np.einsum("ms,sd->md",
+                                    np.asarray(rows, np.float64),
+                                    np.asarray(ks, np.float64)))
+    for use_pallas in (False, True):
+        got = butcher_combine_rows(x, ks, rows, scale, h,
+                                   use_pallas=use_pallas)
+        assert got.dtype == np.float64
+        np.testing.assert_allclose(np.asarray(got), want_rows,
+                                   rtol=1e-14, atol=1e-14)
+
+
+def test_memory_scaling_symplectic_flat_backprop_linear():
+    """Fast end-to-end memory check on a thin probe net (the full-width
+    Table-1 audit with both methods is the CI --check lane): symplectic's
+    static peak stays flat as n_steps grows 8x while DirectBackprop's
+    grows ~linearly, and symplectic sits strictly below it."""
+    kw = dict(dim=4, hidden=32)
+    sym = [_grad_peak_bytes("symplectic", "dopri5", n, **kw)
+           for n in (8, 64)]
+    bp = [_grad_peak_bytes("backprop", "dopri5", n, **kw) for n in (8, 64)]
+    assert sym[1] / sym[0] < 1.5
+    assert bp[1] / bp[0] > 3.0
+    assert sym[1] < bp[1]
+
+
+@pytest.mark.slow
+def test_run_analysis_check_is_clean():
+    """The exact CI gate: every enumerated dopri5 case traces, every rule
+    runs against the committed budgets, and there are zero errors."""
+    from repro.analysis import load_budgets, run_analysis
+
+    budgets = load_budgets()
+    assert budgets is not None
+    report = run_analysis(budgets, methods=("dopri5",), run_memory=False)
+    assert report.ok, "\n".join(str(f) for f in report.errors)

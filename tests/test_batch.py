@@ -93,11 +93,18 @@ def test_batched_accepted_grids_match_singles():
                                 0.0, 1.0, PARAMS, CFG, "jnp")
         assert int(bat.n_accepted[b]) == int(one.n_accepted)
         n = int(one.n_accepted)
+        # the accept/reject SEQUENCE is identical (n_accepted above); the
+        # realized grid matches to f64 rounding error, not bit-for-bit:
+        # XLA fuses the batched and single loop bodies differently, and
+        # since _error_norm accumulates in the full state dtype (f64
+        # here — the dtype-discipline fix; it used to quantize through
+        # f32, which masked last-ulp state differences), those ulps
+        # legitimately propagate into the controller's h.
         np.testing.assert_allclose(bat.ts[:n, b], one.ts[:n], rtol=0,
-                                   atol=1e-14)
+                                   atol=1e-11)
         np.testing.assert_allclose(bat.hs[:n, b], one.hs[:n], rtol=0,
-                                   atol=1e-14)
-        assert abs(float(bat.h_final[b] - one.h_final)) < 1e-14
+                                   atol=1e-11)
+        assert abs(float(bat.h_final[b] - one.h_final)) < 1e-11
 
 
 def test_batched_saveat_values_and_stats_match_singles():
@@ -305,8 +312,10 @@ def test_mixed_magnitude_batched_grid_matches_singles():
                                 0.0, 1.0, p, cfg, "jnp")
         assert int(bat.n_accepted[b]) == int(one.n_accepted)
         n = int(one.n_accepted)
+        # rounding-error scale, not bit-for-bit — same fusion-order caveat
+        # as test_batched_accepted_grids_match_singles
         np.testing.assert_allclose(bat.hs[:n, b], one.hs[:n], rtol=0,
-                                   atol=1e-14)
+                                   atol=1e-11)
 
 
 # ---------------------------------------------------------------------------

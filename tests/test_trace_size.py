@@ -19,6 +19,7 @@ import pytest
 
 jax.config.update("jax_enable_x64", True)
 
+from repro.analysis import count_eqns
 from repro.core import AdaptiveConfig, GRAD_MODES, odeint
 
 # Deliberately exercises the deprecated odeint shim (shim regression suite).
@@ -26,31 +27,6 @@ pytestmark = pytest.mark.filterwarnings(
     "ignore:odeint-style entry point:DeprecationWarning")
 
 ADAPTIVE_MODES = ["symplectic", "backprop", "adjoint"]
-
-
-def count_eqns(jaxpr) -> int:
-    """Total equation count of a jaxpr including all nested sub-jaxprs."""
-    n = len(jaxpr.eqns)
-    for eqn in jaxpr.eqns:
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                n += count_eqns(sub)
-    return n
-
-
-def _subjaxprs(v):
-    # duck-typed: jax.core.Jaxpr/ClosedJaxpr moved to jax.extend.core in
-    # newer JAX, so detect by shape instead of importing either path.
-    if hasattr(v, "jaxpr") and hasattr(v, "consts"):    # ClosedJaxpr
-        return [v.jaxpr]
-    if hasattr(v, "eqns") and hasattr(v, "invars"):     # Jaxpr
-        return [v]
-    if isinstance(v, (list, tuple)):
-        out = []
-        for x in v:
-            out.extend(_subjaxprs(x))
-        return out
-    return []
 
 
 def mlp_field(x, t, params):
