@@ -15,6 +15,7 @@ artifact, not just job logs.  CI uploads ``BENCH_*.json`` from the
   bench_combine         -> fused vs unfused stage combination (StageCombiner)
   bench_saveat_compile  -> SaveAt compile time vs observation count
   bench_batch           -> masked per-lane batching vs lockstep (batch_axis)
+  bench_serve           -> continuous-batching engine vs sequential solving
   roofline              -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
 
 Usage:
@@ -74,7 +75,7 @@ def main() -> None:
 
     from . import (bench_batch, bench_cnf, bench_combine, bench_orders,
                    bench_physics, bench_rk_sweep, bench_saveat_compile,
-                   bench_steps, roofline)
+                   bench_serve, bench_steps, roofline)
 
     benches = [
         ("bench_tolerance", _tolerance_subprocess),
@@ -86,6 +87,7 @@ def main() -> None:
         ("bench_combine", bench_combine.main),
         ("bench_saveat_compile", bench_saveat_compile.main),
         ("bench_batch", bench_batch.main),
+        ("bench_serve", bench_serve.main),
         ("roofline", roofline.main),
     ]
     only = args[0] if args else None

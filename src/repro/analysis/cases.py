@@ -26,7 +26,8 @@ from repro.core import AdaptiveConfig, SaveAt, solve
 from repro.core.api import GRADIENT_REGISTRY
 
 __all__ = ["Case", "enumerate_cases", "case_jaxprs", "mlp_field",
-           "make_probe", "ensure_x64", "CUSTOM_VJP_STRATEGIES"]
+           "make_probe", "ensure_x64", "CUSTOM_VJP_STRATEGIES",
+           "engine_advance_probe"]
 
 # strategies whose adaptive drivers are custom_vjp (reverse-differentiable
 # across the while_loop); everything else is fixed-grid-grad only
@@ -127,6 +128,40 @@ def make_probe(case: Case, *, dim: int = 4, hidden: int = 16,
                        for leaf in jax.tree_util.tree_leaves(ys))
         grad_fn = jax.grad(loss_fn, argnums=(0, 1))
     return value_fn, grad_fn, (x0, params)
+
+
+def engine_advance_probe(method: str = "dopri5", *, dim: int = 32,
+                         hidden: int = 16, lanes: int = 8,
+                         max_steps: int = 64, dtype=jnp.float64):
+    """The serve engine's hot entry point, as a (jaxpr, donated-set) pair.
+
+    Traces ``AdaptiveStepper.advance`` over a lane-batched ``SolverState``
+    with tolerances-as-data — exactly the shape the continuous-batching
+    engine AOT-compiles with ``donate_argnums=0`` — sized so the slot
+    checkpoint buffers clear the donation rule's ``min_bytes`` floor.
+    ``donated`` is the flat invar index set of the state leaves (argument
+    0), letting the donation-hazard rule verify at ERROR severity that
+    every large state output aliases a donated input: the engine's
+    in-place slot-update contract (docs/serving.md).
+    """
+    ensure_x64()
+    from repro.core.stepper import AdaptiveStepper
+    from repro.core.tableau import get_tableau
+    field = mlp_field()
+    params = {"w1": jnp.zeros((dim, hidden), dtype),
+              "b1": jnp.zeros((hidden,), dtype),
+              "bt": jnp.zeros((hidden,), dtype),
+              "w2": jnp.zeros((hidden, dim), dtype),
+              "b2": jnp.zeros((dim,), dtype)}
+    cfg = AdaptiveConfig(max_steps=max_steps)
+    stepper = AdaptiveStepper(field, get_tableau(method), cfg,
+                              combine_backend="jnp")
+    x0 = jnp.zeros((lanes, dim), dtype)
+    state = stepper.init_state(x0, 0.0, 1.0, lanes=lanes,
+                               rtol=cfg.rtol, atol=cfg.atol)
+    closed = jax.make_jaxpr(stepper.advance)(state, params)
+    donated = frozenset(range(len(jax.tree_util.tree_leaves(state))))
+    return closed, donated
 
 
 def case_jaxprs(case: Case, **knobs) -> Dict[str, Optional[object]]:

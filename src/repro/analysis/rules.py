@@ -110,20 +110,32 @@ def constant_findings(closed, case: str = "<jaxpr>",
 
 @register_rule("donation-hazard")
 def donation_findings(closed, case: str = "<jaxpr>",
-                      min_bytes: int = 1 << 16) -> List[Finding]:
+                      min_bytes: int = 1 << 16,
+                      donated=frozenset(),
+                      severity: str = INFO) -> List[Finding]:
     """Undonated buffer opportunities on an entry point.
 
     An output whose (shape, dtype) matches an input of >= ``min_bytes``
     could reuse that input's buffer under ``jax.jit(...,
     donate_argnums=...)`` — the train-step / solver-state update pattern.
-    INFO severity: a hint for the jit callsite, not a defect in the jaxpr.
+    INFO severity by default: a hint for the jit callsite, not a defect in
+    the jaxpr.
+
+    ``donated`` is the set of flat invar INDICES the callsite actually
+    donates: each matching output first consumes a donated input of its
+    aval (aliased — no finding), and only the remainder counts as missed
+    opportunity.  Audited entry points that promise full donation (the
+    serve engine's ``advance``, where every slot buffer must be reused in
+    place) pass their donated set and ``severity="error"`` — any output
+    left matching an UNdonated input then fails ``--check``.
     """
     out = []
-    in_avals = {}
-    for v in closed.jaxpr.invars:
+    donated_avals, free_avals = {}, {}
+    for i, v in enumerate(closed.jaxpr.invars):
         key = (tuple(getattr(v.aval, "shape", ())),
                str(getattr(v.aval, "dtype", "")))
-        in_avals[key] = in_avals.get(key, 0) + 1
+        pool = donated_avals if i in donated else free_avals
+        pool[key] = pool.get(key, 0) + 1
     matched = 0
     bytes_total = 0
     for v in closed.jaxpr.outvars:
@@ -132,15 +144,20 @@ def donation_findings(closed, case: str = "<jaxpr>",
         b = aval_bytes(v.aval)
         key = (tuple(getattr(v.aval, "shape", ())),
                str(getattr(v.aval, "dtype", "")))
-        if b >= min_bytes and in_avals.get(key, 0) > 0:
-            in_avals[key] -= 1
+        if b < min_bytes:
+            continue
+        if donated_avals.get(key, 0) > 0:           # aliased: already reused
+            donated_avals[key] -= 1
+            continue
+        if free_avals.get(key, 0) > 0:
+            free_avals[key] -= 1
             matched += 1
             bytes_total += b
     if matched:
         out.append(Finding(
-            "donation-hazard", INFO, case,
+            "donation-hazard", severity, case,
             f"{matched} output buffer(s) ({bytes_total / 2**10:.0f} KiB) "
-            "match input shapes/dtypes: donating the inputs "
+            "match undonated input shapes/dtypes: donating the inputs "
             "(jit donate_argnums) would reuse their buffers"))
     return out
 

@@ -25,6 +25,8 @@ from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
                  rk_solve_adaptive_batched_saveat_stacked,
                  rk_solve_adaptive_saveat, rk_solve_adaptive_saveat_stacked,
                  rk_solve_fixed, rk_stages, rk_step, tree_scale_add)
+from .stepper import (AdaptiveStepper, FixedSolverState, FixedStepper,
+                      SolverState)
 from .symplectic import (odeint_symplectic, odeint_symplectic_adaptive,
                          odeint_symplectic_adaptive_batched,
                          odeint_symplectic_saveat,
@@ -53,6 +55,7 @@ __all__ = [
     "rk_solve_adaptive_batched_saveat_stacked", "lane_count",
     "rk_step", "rk_stages", "tree_scale_add", "apply_on_failure",
     "apply_on_failure_lanes",
+    "SolverState", "FixedSolverState", "AdaptiveStepper", "FixedStepper",
     "hermite_observe", "odeint_symplectic", "odeint_symplectic_adaptive",
     "odeint_symplectic_adaptive_batched",
     "odeint_symplectic_saveat", "odeint_symplectic_saveat_adaptive",

@@ -1,16 +1,30 @@
 """Explicit Runge-Kutta integration over arbitrary pytree states.
 
-Two drivers:
-  * ``rk_solve_fixed``    — N equal steps via lax.scan (deterministic shape;
-                            used by the LM node_mode and all dry-run cells).
-  * ``rk_solve_adaptive`` — PI-controlled adaptive stepping via lax.while_loop
-                            with a bounded ``max_steps`` checkpoint buffer
-                            (used by the CNF / physics experiments, mirroring
-                            the paper's dopri5-adaptive setting).
+Three drivers, all thin loops over the stepper state machine in
+core/stepper.py (``init_state -> advance* -> finalize``):
 
-Both record the step checkpoints {x_n, t_n, h_n} that Algorithm 1 of the paper
-retains; computation graphs are never part of the residuals (the gradient
-modes in odeint.py decide what autodiff sees).
+  * ``rk_solve_fixed``    — N equal steps: a ``FixedStepper`` run as one
+                            lax.scan over ``advance`` (scan, not while_loop,
+                            so DirectBackprop / remat strategies can still
+                            differentiate straight through it; used by the
+                            LM node_mode and all dry-run cells).
+  * ``rk_solve_adaptive`` — PI-controlled adaptive stepping: an
+                            ``AdaptiveStepper`` run as one lax.while_loop
+                            whose carry IS the ``SolverState`` — bounded
+                            ``max_steps`` checkpoint buffers (used by the
+                            CNF / physics experiments, mirroring the
+                            paper's dopri5-adaptive setting).
+  * ``rk_solve_adaptive_batched`` — B independent trajectories, one
+                            while_loop, masked per-lane control: the SAME
+                            stepper with a lane-batched ``SolverState``.
+
+All record the step checkpoints {x_n, t_n, h_n} that Algorithm 1 of the
+paper retains; computation graphs are never part of the residuals (the
+gradient strategies in api.py decide what autodiff sees).  Because the
+between-steps state is an explicit registered pytree, any solve can also be
+paused, saved, restored, and resumed bit-identically — and the
+continuous-batching serve engine (repro.serve) drives the same ``advance``
+over a masked lane state, inserting new trajectories mid-flight.
 
 Stage representation: slopes are held in a *stacked* buffer — one leading
 stage dimension per leaf — and every stage linear combination (stage states,
@@ -24,19 +38,16 @@ f(x_{n+1}), one whole network evaluation — per step.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
-
 import jax
 import jax.numpy as jnp
 
-from .combine import (StageCombiner, alloc_stages, append_stage,
-                      get_combiner, set_stage)
+from .combine import get_combiner
 from .tableau import ButcherTableau
-
-Pytree = Any
-VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
-# f(x, t, params) -> dx/dt, pytree-in pytree-out.
+from .stepper import (  # noqa: F401  (re-exports: the step-level surface)
+    ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution, AdaptiveStepper,
+    BatchedAdaptiveSolution, FixedSolution, FixedSolverState, FixedStepper,
+    Pytree, SolverState, VectorField, _error_norm, _error_norm_lanes,
+    _time_resolution, lane_bcast, lane_count, rk_stages, rk_step)
 
 
 def time_zero_cotangent(t):
@@ -75,150 +86,17 @@ def tree_scale_add(base: Pytree, terms) -> Pytree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def rk_stages(f: VectorField, tab: ButcherTableau, x, t, h, params,
-              combiner: Optional[StageCombiner] = None):
-    """Compute all stage states X_i and slopes k_i for one step.
-
-    Returns (Xs, K): ``Xs`` is a list of s stage-state pytrees, ``K`` the
-    stacked slope buffer (leading stage dim s per leaf).  Purely forward;
-    the symplectic backward pass re-runs this from a checkpoint (Alg. 2
-    lines 3-7).
-    """
-    combiner = combiner or get_combiner(tab)
-    s = tab.s
-    K = alloc_stages(s, x)
-    Xs = []
-    for i in range(s):
-        Xi = combiner.stage_state(x, K, h, i)
-        ki = f(Xi, t + tab.c[i] * h, params)
-        K = set_stage(K, i, ki)
-        Xs.append(Xi)
-    return Xs, K
-
-
-def rk_step(f: VectorField, tab: ButcherTableau, x, t, h, params,
-            combiner: Optional[StageCombiner] = None,
-            with_error: Optional[bool] = None):
-    """One explicit RK step: returns (x_next, err_estimate_or_None).
-
-    ``with_error=False`` skips the embedded error estimate (the fixed-grid
-    drivers pass it; there is no controller to consume the estimate).  The
-    default (None) computes it whenever the tableau has error weights.
-    """
-    combiner = combiner or get_combiner(tab)
-    if with_error is None:
-        with_error = tab.b_err is not None
-    Xs, K = rk_stages(f, tab, x, t, h, params, combiner)
-    if not (with_error and tab.b_err is not None):
-        return combiner.solution(x, K, h), None
-    if tab.err_uses_fsal:
-        # the error weights reference k_{s+1} = f(x_{n+1}); the solution must
-        # come first, then one extra evaluation extends the slope buffer.
-        x_next = combiner.solution(x, K, h)
-        K_err = append_stage(K, f(x_next, t + h, params))
-        return x_next, combiner.error(x, K_err, h)
-    # both rows (b, b_err) combine the same s slopes: fuse into ONE pass.
-    return combiner.solution_and_error(x, K, h)
-
-
-class FixedSolution(NamedTuple):
-    x_final: Pytree
-    xs: Pytree          # stacked checkpoints x_0..x_{N-1} (leading dim N)
-    ts: jnp.ndarray     # t_0..t_{N-1}
-    h: jnp.ndarray      # scalar step size
-
-
 def rk_solve_fixed(f: VectorField, tab: ButcherTableau, x0, t0, t1,
                    n_steps: int, params,
                    combine_backend: str = "auto") -> FixedSolution:
-    t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
-    t1 = jnp.asarray(t1, dtype=t0.dtype)
-    h = (t1 - t0) / n_steps
-    combiner = get_combiner(tab, combine_backend)
-
-    def body(carry, n):
-        x, = carry
-        t = t0 + n.astype(t0.dtype) * h
-        x_next, _ = rk_step(f, tab, x, t, h, params, combiner,
-                            with_error=False)
-        return (x_next,), (x, t)
-
-    (xf,), (xs, ts) = jax.lax.scan(body, (x0,), jnp.arange(n_steps))
-    return FixedSolution(xf, xs, ts, h)
+    stepper = FixedStepper(f, tab, n_steps, combine_backend)
+    state = stepper.run(stepper.init_state(x0, t0, t1), params)
+    return stepper.finalize(state)
 
 
 # ---------------------------------------------------------------------------
 # Adaptive stepping (PI controller), bounded buffer of accepted checkpoints.
 # ---------------------------------------------------------------------------
-
-ON_FAILURE_POLICIES = ("nan", "ignore", "raise")
-
-
-@dataclasses.dataclass(frozen=True)
-class AdaptiveConfig:
-    rtol: float = 1e-6
-    atol: float = 1e-8
-    max_steps: int = 256          # checkpoint buffer bound (accepted steps)
-    max_attempts: int = 4096      # total trial-step bound
-    safety: float = 0.9
-    min_factor: float = 0.2
-    max_factor: float = 10.0
-    initial_step: float = 0.01
-    # what odeint does with x_final when the while-loop exits via the
-    # max_steps / max_attempts budget without reaching t1:
-    #   "nan"    — poison every inexact leaf with NaN  [default]
-    #   "ignore" — return the truncated state as-is (pre-fix behaviour)
-    #   "raise"  — jax.debug.callback that raises at dispatch time
-    on_failure: str = "nan"
-
-    def __post_init__(self):
-        if self.on_failure not in ON_FAILURE_POLICIES:
-            raise ValueError(f"on_failure {self.on_failure!r} not in "
-                             f"{ON_FAILURE_POLICIES}")
-
-
-class AdaptiveSolution(NamedTuple):
-    x_final: Pytree
-    xs: Pytree           # (max_steps, ...) accepted checkpoints, zero-padded
-    ts: jnp.ndarray      # (max_steps,)
-    hs: jnp.ndarray      # (max_steps,)
-    n_accepted: jnp.ndarray  # int32 scalar
-    n_fevals: jnp.ndarray    # int32 scalar
-    succeeded: jnp.ndarray   # bool scalar: reached t1 within the budgets
-    h_final: jnp.ndarray     # UNclamped controller step at exit (see below)
-    n_attempts: jnp.ndarray  # int32 scalar: total trial steps (acc + rej)
-
-
-def _error_norm(err, x, x_next, rtol, atol):
-    leaves = zip(jax.tree_util.tree_leaves(err),
-                 jax.tree_util.tree_leaves(x),
-                 jax.tree_util.tree_leaves(x_next))
-    total, count = 0.0, 0
-    for e, a, b in leaves:
-        scale = atol + rtol * jnp.maximum(jnp.abs(a), jnp.abs(b))
-        # accumulate in >= f32 but NEVER below the state dtype: an f32 norm
-        # under x64 quantizes the accept/reject decisions of an f64 solve
-        # (caught by the repro.analysis dtype rule).
-        r = (e / scale).astype(jnp.promote_types(e.dtype, jnp.float32))
-        total = total + jnp.sum(r * r)
-        count += r.size
-    return jnp.sqrt(total / count)
-
-
-def _time_resolution(t0, t1, dtype):
-    """Smallest meaningful |t1 - t| for the termination test.
-
-    The old fixed threshold (1e-14) is below float32 resolution for typical
-    t, so with x64 disabled the loop could burn attempts re-trying steps
-    whose ``t + h`` rounds back to ``t``.  Scale by the representable
-    resolution of the interval instead: a few ulps of max(|t0|, |t1|,
-    |t1 - t0|) in the working dtype.
-    """
-    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
-    scale = jnp.maximum(jnp.abs(t1 - t0),
-                        jnp.maximum(jnp.abs(t0), jnp.abs(t1)))
-    return 4.0 * eps * jnp.maximum(scale, eps)
-
 
 def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
                       params, cfg: AdaptiveConfig,
@@ -236,103 +114,15 @@ def rk_solve_adaptive(f: VectorField, tab: ButcherTableau, x0, t0, t1,
     step against the t1 boundary cannot collapse the step size for a
     continuation (or for a backward adjoint solve reusing the config),
     whether the landing trial succeeds or not.
+
+    The whole driver is ``AdaptiveStepper.run``: one lax.while_loop over
+    ``advance``, carrying the explicit ``SolverState`` — every controller
+    rule (clamp, PI factor, commit, budgets) lives in ``advance`` and is
+    shared verbatim with the batched driver and the serve engine.
     """
-    if tab.b_err is None:
-        raise ValueError(f"tableau {tab.name} has no embedded error estimate")
-    dtype = jnp.result_type(float)
-    t0 = jnp.asarray(t0, dtype=dtype)
-    t1 = jnp.asarray(t1, dtype=dtype)
-    direction = jnp.sign(t1 - t0)
-    t_res = _time_resolution(t0, t1, dtype)
-    err_exp = -1.0 / (tab.err_order + 1.0)
-    combiner = get_combiner(tab, combine_backend)
-
-    zeros_like_buf = jax.tree_util.tree_map(
-        lambda l: jnp.zeros((cfg.max_steps,) + l.shape, l.dtype), x0)
-    ts_buf = jnp.zeros((cfg.max_steps,), dtype)
-    hs_buf = jnp.zeros((cfg.max_steps,), dtype)
-
-    def cond(state):
-        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        # non-finite h means the solve is already dead (a NaN state or field
-        # NaNs the error norm, the rejection then NaNs the h carry): bail
-        # instead of burning max_attempts identical doomed trials — e.g.
-        # when a later SaveAt segment starts from a poisoned on_failure
-        # state.  Exiting short of t1 leaves succeeded=False as usual.
-        return (direction * (t1 - t) > t_res) \
-            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts) \
-            & jnp.isfinite(h)
-
-    def body(state):
-        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        # clamp the TRIAL step so we land exactly on t1; the carried h
-        # stays unclamped (see the docstring).
-        clamped = jnp.abs(h) > jnp.abs(t1 - t)
-        h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
-        x_next, err = rk_step(f, tab, x, t, h_eff, params, combiner,
-                              with_error=True)
-        enorm = _error_norm(err, x, x_next, cfg.rtol, cfg.atol)
-        accept = enorm <= 1.0
-        factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
-                                                 err_exp),
-                          cfg.min_factor, cfg.max_factor)
-        # clamped landing steps never contaminate the carried step: an
-        # ACCEPTED one keeps the natural h, a REJECTED one shrinks from the
-        # unclamped h (not from h_eff, which is the t1 gap, not the
-        # controller's step — shrinking from it collapses the carry exactly
-        # like the accepted case fixed earlier).  Progress is still
-        # guaranteed: factor < 1 on every rejection, so h decays
-        # geometrically until the trial is no longer clamped — at the cost
-        # of up to ceil(log(|h|/gap)/log(1/factor)) re-attempts of the
-        # identical clamped trial while |h·factor^k| still exceeds the gap
-        # (bounded, and only on the rare rejected-landing path; preserving
-        # the carry for the continuation is worth it).  For unclamped
-        # trials h_eff == h, so both arms of the old update coincide there.
-        h_new = jnp.where(accept & clamped, h, h * factor)
-
-        def commit(bufs):
-            xs_b, ts_b, hs_b = bufs
-            xs_b = jax.tree_util.tree_map(
-                lambda buf, val: jax.lax.dynamic_update_index_in_dim(
-                    buf, val.astype(buf.dtype), n_acc, 0), xs_b, x)
-            ts_b = jax.lax.dynamic_update_index_in_dim(ts_b, t, n_acc, 0)
-            hs_b = jax.lax.dynamic_update_index_in_dim(hs_b, h_eff, n_acc, 0)
-            return xs_b, ts_b, hs_b
-
-        xs, ts, hs = jax.lax.cond(accept, commit, lambda bufs: bufs,
-                                  (xs, ts, hs))
-        t = jnp.where(accept, t + h_eff, t)
-        x = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(accept, b, a), x, x_next)
-        n_acc = n_acc + accept.astype(jnp.int32)
-        fevals = tab.s + (1 if tab.err_uses_fsal else 0)
-        return (t, x, h_new, n_acc, n_try + 1, xs, ts, hs, fe + fevals)
-
-    h0_abs = jnp.abs(jnp.asarray(cfg.initial_step if h0 is None else h0,
-                                 dtype))
-    h_init = direction * jnp.where(h0_abs > 0, h0_abs,
-                                   jnp.asarray(cfg.initial_step, dtype))
-    state0 = (t0, x0, h_init, jnp.int32(0), jnp.int32(0),
-              zeros_like_buf, ts_buf, hs_buf, jnp.int32(0))
-    (t, x, h, n_acc, n_try, xs, ts, hs, fe) = jax.lax.while_loop(
-        cond, body, state0)
-    succeeded = jnp.logical_not(direction * (t1 - t) > t_res)
-    return AdaptiveSolution(x, xs, ts, hs, n_acc, fe, succeeded, h, n_try)
-
-
-def _error_norm_lanes(err, x, x_next, rtol, atol):
-    """Per-lane error norms for lane-batched states (lane axis 0 per leaf).
-
-    This is ``jax.vmap`` of ``_error_norm`` itself, NOT a reimplementation:
-    each lane's norm applies the identical per-leaf elementwise scale
-    ``atol + rtol * max(|x|, |x_next|)`` and the identical element-count
-    weighting across mixed-magnitude leaves as a single-trajectory solve of
-    that lane — so masked per-lane step control accepts exactly the steps a
-    loop of single solves would (tests/test_batch.py pins this for
-    mixed-magnitude pytree states).  Returns shape (B,).
-    """
-    return jax.vmap(
-        lambda e, a, b: _error_norm(e, a, b, rtol, atol))(err, x, x_next)
+    stepper = AdaptiveStepper(f, tab, cfg, combine_backend)
+    state = stepper.init_state(x0, t0, t1, h0)
+    return stepper.finalize(stepper.run(state, params))
 
 
 def _raise_on_failure_cb(ok):
@@ -340,14 +130,6 @@ def _raise_on_failure_cb(ok):
         raise RuntimeError(
             "odeint: adaptive solver exhausted max_steps/max_attempts "
             "without reaching t1 (AdaptiveConfig(on_failure='raise'))")
-
-
-def lane_bcast(v, leaf):
-    """Broadcast a per-lane vector (B,) against a lane-batched leaf (B, ...).
-
-    Also the degenerate scalar case: a () ``v`` reshapes to all-singleton
-    dims, so one code path serves batched and unbatched policies."""
-    return jnp.reshape(v, jnp.shape(v) + (1,) * (jnp.ndim(leaf) - 1))
 
 
 def apply_on_failure(x_final: Pytree, succeeded, on_failure: str) -> Pytree:
@@ -373,26 +155,6 @@ def apply_on_failure(x_final: Pytree, succeeded, on_failure: str) -> Pytree:
     return jax.tree_util.tree_map(poison, x_final)
 
 
-def lane_count(x0: Pytree) -> int:
-    """Lane count B of a lane-batched state: every leaf must carry the same
-    leading lane axis (``solve(..., batch_axis=0)``)."""
-    leaves = jax.tree_util.tree_leaves(x0)
-    if not leaves:
-        raise ValueError("batched solve needs a non-empty state pytree")
-    sizes = set()
-    for l in leaves:
-        if jnp.ndim(l) < 1:
-            raise ValueError(
-                "batch_axis=0 requires every state leaf to carry a leading "
-                f"lane axis; got a rank-0 leaf {l!r}")
-        sizes.add(jnp.shape(l)[0])
-    if len(sizes) != 1:
-        raise ValueError(
-            "batch_axis=0 requires every state leaf to share the same "
-            f"leading lane-axis size; got sizes {sorted(sizes)}")
-    return sizes.pop()
-
-
 # Named alias for the per-lane reading at batched call sites; the policy
 # logic lives once in apply_on_failure (lane_bcast handles both ranks).
 apply_on_failure_lanes = apply_on_failure
@@ -401,25 +163,6 @@ apply_on_failure_lanes = apply_on_failure
 # ---------------------------------------------------------------------------
 # Batch-native adaptive stepping: one while_loop, masked per-lane control.
 # ---------------------------------------------------------------------------
-
-class BatchedAdaptiveSolution(NamedTuple):
-    """Per-lane results of a batch-native adaptive solve (lane count B).
-
-    The checkpoint buffers keep the step axis LEADING — ``xs`` leaves are
-    (max_steps, B, ...), ``ts``/``hs`` are (max_steps, B) — so the
-    symplectic backward pass scans step rows exactly like the unbatched
-    driver, masking each lane by its own ``n_accepted``.
-    """
-    x_final: Pytree          # per-lane final states (lane axis 0)
-    xs: Pytree               # (max_steps, B, ...) accepted checkpoints
-    ts: jnp.ndarray          # (max_steps, B)
-    hs: jnp.ndarray          # (max_steps, B)
-    n_accepted: jnp.ndarray  # (B,) int32
-    n_fevals: jnp.ndarray    # (B,) int32: per-lane f evaluations
-    succeeded: jnp.ndarray   # (B,) bool: lane reached t1 within budgets
-    h_final: jnp.ndarray     # (B,) unclamped controller step at lane exit
-    n_attempts: jnp.ndarray  # (B,) int32: per-lane trial steps (acc + rej)
-
 
 def rk_solve_adaptive_batched(f: VectorField, tab: ButcherTableau, x0,
                               t0, t1, params, cfg: AdaptiveConfig,
@@ -443,96 +186,16 @@ def rk_solve_adaptive_batched(f: VectorField, tab: ButcherTableau, x0,
 
     Every controller rule matches ``rk_solve_adaptive`` per lane — the
     unclamped-h carry for landing steps, the dtype-aware termination
-    threshold, the PI factor — so lane b of the result is the
+    threshold, the PI factor — because it IS the same rule: both drivers
+    run ``AdaptiveStepper.advance``, whose state is scalar () for a single
+    trajectory and (B,) here — so lane b of the result is the
     single-trajectory solve of lane b to rounding (tests/test_batch.py).
     ``t0``/``t1``/``h0`` may be scalars (shared) or (B,) per-lane arrays.
     """
-    if tab.b_err is None:
-        raise ValueError(f"tableau {tab.name} has no embedded error estimate")
     B = lane_count(x0)
-    dtype = jnp.result_type(float)
-    t0 = jnp.broadcast_to(jnp.asarray(t0, dtype=dtype), (B,))
-    t1 = jnp.broadcast_to(jnp.asarray(t1, dtype=dtype), (B,))
-    direction = jnp.sign(t1 - t0)
-    t_res = _time_resolution(t0, t1, dtype)
-    err_exp = -1.0 / (tab.err_order + 1.0)
-    combiner = get_combiner(tab, combine_backend)
-
-    step_lanes = jax.vmap(
-        lambda x_l, t_l, h_l: rk_step(f, tab, x_l, t_l, h_l, params,
-                                      combiner, with_error=True))
-
-    zeros_like_buf = jax.tree_util.tree_map(
-        lambda l: jnp.zeros((cfg.max_steps,) + l.shape, l.dtype), x0)
-    ts_buf = jnp.zeros((cfg.max_steps, B), dtype)
-    hs_buf = jnp.zeros((cfg.max_steps, B), dtype)
-
-    def _commit_lane(col, val, idx, do):
-        # col: ONE lane's (max_steps, ...) buffer column.  Touch only row
-        # idx (read-select-write), so a trial step costs O(state) per lane,
-        # not an O(max_steps * state) whole-buffer select.
-        cur = jax.lax.dynamic_index_in_dim(col, idx, 0, keepdims=False)
-        new = jnp.where(do, val.astype(col.dtype), cur)
-        return jax.lax.dynamic_update_index_in_dim(col, new, idx, 0)
-
-    commit = jax.vmap(_commit_lane, in_axes=(1, 0, 0, 0), out_axes=1)
-
-    def lanes_active(t, n_acc, n_try, h):
-        # the isfinite(h) bail mirrors the single driver: a lane whose
-        # state went NaN (e.g. poisoned by on_failure in an earlier SaveAt
-        # segment) NaNs its h carry on the first rejected trial and drops
-        # out of the batch one iteration later, instead of pinning every
-        # healthy lane behind max_attempts doomed full-batch steps.
-        return (direction * (t1 - t) > t_res) \
-            & (n_acc < cfg.max_steps) & (n_try < cfg.max_attempts) \
-            & jnp.isfinite(h)
-
-    def cond(state):
-        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        return jnp.any(lanes_active(t, n_acc, n_try, h))
-
-    def body(state):
-        (t, x, h, n_acc, n_try, xs, ts, hs, fe) = state
-        active = lanes_active(t, n_acc, n_try, h)
-        # per-lane trial clamp; the carried h stays unclamped exactly as in
-        # rk_solve_adaptive (accepted clamped landings keep h, rejected
-        # ones retry from h * factor).
-        clamped = jnp.abs(h) > jnp.abs(t1 - t)
-        h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(t1 - t))
-        x_next, err = step_lanes(x, t, h_eff)
-        enorm = _error_norm_lanes(err, x, x_next, cfg.rtol, cfg.atol)
-        accept = enorm <= 1.0
-        factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
-                                                 err_exp),
-                          cfg.min_factor, cfg.max_factor)
-        h_new = jnp.where(accept & clamped, h, h * factor)
-        h = jnp.where(active, h_new, h)      # done lanes freeze their carry
-        do = active & accept
-        xs = jax.tree_util.tree_map(
-            lambda buf, val: commit(buf, val, n_acc, do), xs, x)
-        ts = commit(ts, t, n_acc, do)
-        hs = commit(hs, h_eff, n_acc, do)
-        t = jnp.where(do, t + h_eff, t)
-        x = jax.tree_util.tree_map(
-            lambda a, b: jnp.where(lane_bcast(do, a), b, a), x, x_next)
-        n_acc = n_acc + do.astype(jnp.int32)
-        n_try = n_try + active.astype(jnp.int32)
-        fevals = tab.s + (1 if tab.err_uses_fsal else 0)
-        fe = fe + active.astype(jnp.int32) * fevals
-        return (t, x, h, n_acc, n_try, xs, ts, hs, fe)
-
-    h0_abs = jnp.abs(jnp.broadcast_to(
-        jnp.asarray(cfg.initial_step if h0 is None else h0, dtype), (B,)))
-    h_init = direction * jnp.where(h0_abs > 0, h0_abs,
-                                   jnp.asarray(cfg.initial_step, dtype))
-    lane_i32 = jnp.zeros((B,), jnp.int32)
-    state0 = (t0, x0, h_init, lane_i32, lane_i32,
-              zeros_like_buf, ts_buf, hs_buf, lane_i32)
-    (t, x, h, n_acc, n_try, xs, ts, hs, fe) = jax.lax.while_loop(
-        cond, body, state0)
-    succeeded = jnp.logical_not(direction * (t1 - t) > t_res)
-    return BatchedAdaptiveSolution(x, xs, ts, hs, n_acc, fe, succeeded,
-                                   h, n_try)
+    stepper = AdaptiveStepper(f, tab, cfg, combine_backend)
+    state = stepper.init_state(x0, t0, t1, h0, lanes=B)
+    return stepper.finalize(stepper.run(state, params))
 
 
 def rk_solve_adaptive_batched_saveat_stacked(

@@ -1,0 +1,577 @@
+"""Explicit solver state machine: one step of any driver as a pure function.
+
+Every driver family in this repo — fixed grid, adaptive, batched adaptive,
+and the SaveAt segment chains built on them — advances the same small bundle
+of values: the integration clock, the state pytree, the controller's step
+carry, counters, and the bounded checkpoint buffers Algorithm 1 of the paper
+retains.  Before this module that bundle existed only as anonymous
+``lax.while_loop`` / ``lax.scan`` carries duplicated across the drivers in
+core/rk.py.  Here it is a first-class registered pytree, ``SolverState``,
+plus a stepper API:
+
+    stepper = AdaptiveStepper(f, tab, cfg, combine_backend)
+    state   = stepper.init_state(x0, t0, t1)        # or lanes=B for a batch
+    state   = stepper.advance(state, params)        # ONE attempted step:
+                                                    #   trial, accept/reject,
+                                                    #   commit
+    stepper.is_done(state)                          # all lanes landed/budget
+    sol     = stepper.finalize(state)               # Adaptive/Batched
+                                                    #   AdaptiveSolution
+
+``advance`` is a pure ``SolverState -> SolverState`` map, so a solve can be
+paused anywhere, the state flattened / saved / restored / shipped across
+hosts, and resumed bit-identically (tests/test_stepper.py): the paper's
+memory bound is exactly the statement that this state is SMALL — one step's
+worth, O(M + s + L) live — which is what makes it checkpointable at all.
+The drivers in core/rk.py are thin loops over ``advance`` (``run``), and
+the continuous-batching serve engine (repro.serve) drives the SAME
+``advance`` one slice at a time, inserting new trajectories into free lanes
+of a running state between calls.
+
+Single-trajectory and lane-batched solves share one ``advance``: the state's
+time-like fields are scalars for a single trajectory and (B,) for a batch
+(``state.t.ndim`` selects the per-lane error norm and the lane-vmapped
+step), and every controller rule — the unclamped-h landing carry, the
+dtype-aware termination threshold, the PI factor, per-lane accept/commit —
+is the identical arithmetic in both ranks, so lane b of a batched solve
+bit-matches its single solve (tests/test_batch.py still pins this).
+
+``SolverState.rtol``/``atol`` are optional per-solve (or per-lane) tolerance
+OVERRIDES: ``None`` (the drivers) means the config's Python-float tolerances
+are closed into the trace exactly as before, while the serve engine stores
+(B,) arrays so heterogeneous tolerances ride one compiled ``advance``
+without recompilation.
+
+This module also owns the step-level primitives the steppers are built from
+(``rk_step``, ``rk_stages``, the error norms, ``AdaptiveConfig`` and the
+solution tuples); core/rk.py re-exports them, so existing import sites are
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .combine import (StageCombiner, alloc_stages, append_stage,
+                      get_combiner, set_stage)
+from .tableau import ButcherTableau
+
+Pytree = Any
+VectorField = Callable[[Pytree, jnp.ndarray, Pytree], Pytree]
+# f(x, t, params) -> dx/dt, pytree-in pytree-out.
+
+
+# ---------------------------------------------------------------------------
+# One explicit RK step (stage states, slopes, embedded error).
+# ---------------------------------------------------------------------------
+
+def rk_stages(f: VectorField, tab: ButcherTableau, x, t, h, params,
+              combiner: Optional[StageCombiner] = None):
+    """Compute all stage states X_i and slopes k_i for one step.
+
+    Returns (Xs, K): ``Xs`` is a list of s stage-state pytrees, ``K`` the
+    stacked slope buffer (leading stage dim s per leaf).  Purely forward;
+    the symplectic backward pass re-runs this from a checkpoint (Alg. 2
+    lines 3-7).
+    """
+    combiner = combiner or get_combiner(tab)
+    s = tab.s
+    K = alloc_stages(s, x)
+    Xs = []
+    for i in range(s):
+        Xi = combiner.stage_state(x, K, h, i)
+        ki = f(Xi, t + tab.c[i] * h, params)
+        K = set_stage(K, i, ki)
+        Xs.append(Xi)
+    return Xs, K
+
+
+def rk_step(f: VectorField, tab: ButcherTableau, x, t, h, params,
+            combiner: Optional[StageCombiner] = None,
+            with_error: Optional[bool] = None):
+    """One explicit RK step: returns (x_next, err_estimate_or_None).
+
+    ``with_error=False`` skips the embedded error estimate (the fixed-grid
+    drivers pass it; there is no controller to consume the estimate).  The
+    default (None) computes it whenever the tableau has error weights.
+    """
+    combiner = combiner or get_combiner(tab)
+    if with_error is None:
+        with_error = tab.b_err is not None
+    Xs, K = rk_stages(f, tab, x, t, h, params, combiner)
+    if not (with_error and tab.b_err is not None):
+        return combiner.solution(x, K, h), None
+    if tab.err_uses_fsal:
+        # the error weights reference k_{s+1} = f(x_{n+1}); the solution must
+        # come first, then one extra evaluation extends the slope buffer.
+        x_next = combiner.solution(x, K, h)
+        K_err = append_stage(K, f(x_next, t + h, params))
+        return x_next, combiner.error(x, K_err, h)
+    # both rows (b, b_err) combine the same s slopes: fuse into ONE pass.
+    return combiner.solution_and_error(x, K, h)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive controller pieces.
+# ---------------------------------------------------------------------------
+
+ON_FAILURE_POLICIES = ("nan", "ignore", "raise")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    rtol: float = 1e-6
+    atol: float = 1e-8
+    max_steps: int = 256          # checkpoint buffer bound (accepted steps)
+    max_attempts: int = 4096      # total trial-step bound
+    safety: float = 0.9
+    min_factor: float = 0.2
+    max_factor: float = 10.0
+    initial_step: float = 0.01
+    # what odeint does with x_final when the while-loop exits via the
+    # max_steps / max_attempts budget without reaching t1:
+    #   "nan"    — poison every inexact leaf with NaN  [default]
+    #   "ignore" — return the truncated state as-is (pre-fix behaviour)
+    #   "raise"  — jax.debug.callback that raises at dispatch time
+    on_failure: str = "nan"
+
+    def __post_init__(self):
+        if self.on_failure not in ON_FAILURE_POLICIES:
+            raise ValueError(f"on_failure {self.on_failure!r} not in "
+                             f"{ON_FAILURE_POLICIES}")
+
+
+def _tol_like(v, leaf):
+    """Cast an ARRAY tolerance to the leaf dtype so tolerances-as-data
+    (the serve engine's per-lane rtol/atol) reproduce the Python-float
+    path bit-for-bit: a weak float never promotes the scale computation,
+    so a strong f64 tolerance array must not either (e.g. an f32 state
+    under x64).  Python floats pass through untouched — the drivers'
+    closed-into-the-trace path is byte-identical to before."""
+    return v.astype(leaf.dtype) if isinstance(v, jax.Array) else v
+
+
+def _error_norm(err, x, x_next, rtol, atol):
+    leaves = zip(jax.tree_util.tree_leaves(err),
+                 jax.tree_util.tree_leaves(x),
+                 jax.tree_util.tree_leaves(x_next))
+    total, count = 0.0, 0
+    for e, a, b in leaves:
+        scale = _tol_like(atol, a) \
+            + _tol_like(rtol, a) * jnp.maximum(jnp.abs(a), jnp.abs(b))
+        # accumulate in >= f32 but NEVER below the state dtype: an f32 norm
+        # under x64 quantizes the accept/reject decisions of an f64 solve
+        # (caught by the repro.analysis dtype rule).
+        r = (e / scale).astype(jnp.promote_types(e.dtype, jnp.float32))
+        total = total + jnp.sum(r * r)
+        count += r.size
+    return jnp.sqrt(total / count)
+
+
+def _error_norm_lanes(err, x, x_next, rtol, atol):
+    """Per-lane error norms for lane-batched states (lane axis 0 per leaf).
+
+    This is ``jax.vmap`` of ``_error_norm`` itself, NOT a reimplementation:
+    each lane's norm applies the identical per-leaf elementwise scale
+    ``atol + rtol * max(|x|, |x_next|)`` and the identical element-count
+    weighting across mixed-magnitude leaves as a single-trajectory solve of
+    that lane — so masked per-lane step control accepts exactly the steps a
+    loop of single solves would (tests/test_batch.py pins this for
+    mixed-magnitude pytree states).  Returns shape (B,).
+
+    ``rtol``/``atol`` are Python floats (shared across lanes — closed into
+    the trace, the drivers' path) or (B,) arrays (per-lane tolerances, the
+    serve engine's path — vmapped alongside the lanes).
+    """
+    if isinstance(rtol, jnp.ndarray) or isinstance(atol, jnp.ndarray):
+        return jax.vmap(
+            lambda e, a, b, rt, at: _error_norm(e, a, b, rt, at))(
+                err, x, x_next, jnp.asarray(rtol), jnp.asarray(atol))
+    return jax.vmap(
+        lambda e, a, b: _error_norm(e, a, b, rtol, atol))(err, x, x_next)
+
+
+def _time_resolution(t0, t1, dtype):
+    """Smallest meaningful |t1 - t| for the termination test.
+
+    The old fixed threshold (1e-14) is below float32 resolution for typical
+    t, so with x64 disabled the loop could burn attempts re-trying steps
+    whose ``t + h`` rounds back to ``t``.  Scale by the representable
+    resolution of the interval instead: a few ulps of max(|t0|, |t1|,
+    |t1 - t0|) in the working dtype.
+    """
+    eps = jnp.asarray(jnp.finfo(dtype).eps, dtype)
+    scale = jnp.maximum(jnp.abs(t1 - t0),
+                        jnp.maximum(jnp.abs(t0), jnp.abs(t1)))
+    return 4.0 * eps * jnp.maximum(scale, eps)
+
+
+def lane_bcast(v, leaf):
+    """Broadcast a per-lane vector (B,) against a lane-batched leaf (B, ...).
+
+    Also the degenerate scalar case: a () ``v`` reshapes to all-singleton
+    dims, so one code path serves batched and unbatched policies."""
+    return jnp.reshape(v, jnp.shape(v) + (1,) * (jnp.ndim(leaf) - 1))
+
+
+def lane_count(x0: Pytree) -> int:
+    """Lane count B of a lane-batched state: every leaf must carry the same
+    leading lane axis (``solve(..., batch_axis=0)``)."""
+    leaves = jax.tree_util.tree_leaves(x0)
+    if not leaves:
+        raise ValueError("batched solve needs a non-empty state pytree")
+    sizes = set()
+    for l in leaves:
+        if jnp.ndim(l) < 1:
+            raise ValueError(
+                "batch_axis=0 requires every state leaf to carry a leading "
+                f"lane axis; got a rank-0 leaf {l!r}")
+        sizes.add(jnp.shape(l)[0])
+    if len(sizes) != 1:
+        raise ValueError(
+            "batch_axis=0 requires every state leaf to share the same "
+            f"leading lane-axis size; got sizes {sorted(sizes)}")
+    return sizes.pop()
+
+
+# ---------------------------------------------------------------------------
+# Solution tuples (what finalize() returns; the custom-VJP residual contract).
+# ---------------------------------------------------------------------------
+
+class FixedSolution(NamedTuple):
+    x_final: Pytree
+    xs: Pytree          # stacked checkpoints x_0..x_{N-1} (leading dim N)
+    ts: jnp.ndarray     # t_0..t_{N-1}
+    h: jnp.ndarray      # scalar step size
+
+
+class AdaptiveSolution(NamedTuple):
+    x_final: Pytree
+    xs: Pytree           # (max_steps, ...) accepted checkpoints, zero-padded
+    ts: jnp.ndarray      # (max_steps,)
+    hs: jnp.ndarray      # (max_steps,)
+    n_accepted: jnp.ndarray  # int32 scalar
+    n_fevals: jnp.ndarray    # int32 scalar
+    succeeded: jnp.ndarray   # bool scalar: reached t1 within the budgets
+    h_final: jnp.ndarray     # UNclamped controller step at exit (see rk.py)
+    n_attempts: jnp.ndarray  # int32 scalar: total trial steps (acc + rej)
+
+
+class BatchedAdaptiveSolution(NamedTuple):
+    """Per-lane results of a batch-native adaptive solve (lane count B).
+
+    The checkpoint buffers keep the step axis LEADING — ``xs`` leaves are
+    (max_steps, B, ...), ``ts``/``hs`` are (max_steps, B) — so the
+    symplectic backward pass scans step rows exactly like the unbatched
+    driver, masking each lane by its own ``n_accepted``.
+    """
+    x_final: Pytree          # per-lane final states (lane axis 0)
+    xs: Pytree               # (max_steps, B, ...) accepted checkpoints
+    ts: jnp.ndarray          # (max_steps, B)
+    hs: jnp.ndarray          # (max_steps, B)
+    n_accepted: jnp.ndarray  # (B,) int32
+    n_fevals: jnp.ndarray    # (B,) int32: per-lane f evaluations
+    succeeded: jnp.ndarray   # (B,) bool: lane reached t1 within budgets
+    h_final: jnp.ndarray     # (B,) unclamped controller step at lane exit
+    n_attempts: jnp.ndarray  # (B,) int32: per-lane trial steps (acc + rej)
+
+
+# ---------------------------------------------------------------------------
+# SolverState: the full between-steps state of an adaptive solve.
+# ---------------------------------------------------------------------------
+
+class SolverState(NamedTuple):
+    """Everything an adaptive solve carries between attempted steps.
+
+    A registered pytree (NamedTuple of arrays): flatten/unflatten, jit
+    boundaries, device_put/get, and donation all work on it directly.  All
+    time-like / counter fields are scalars () for a single trajectory or
+    (B,) for a lane-batched solve; the checkpoint buffers keep the step
+    axis leading ((max_steps, ...) / (max_steps, B, ...)).
+
+    t0, t1      — the integration interval (per lane when batched; t1 is
+                  DATA, so the serve engine can insert a new trajectory
+                  with its own horizon into a free lane of a running state).
+    t, x, h     — the clock, the state pytree, and the controller's
+                  UNCLAMPED step carry.
+    n_accepted, n_attempts, n_fevals — int32 controller counters.
+    xs, ts, hs  — the bounded accepted-checkpoint buffers of Algorithm 1
+                  (rows >= n_accepted are scratch).
+    rtol, atol  — optional tolerance overrides: ``None`` means the
+                  AdaptiveConfig's Python-float tolerances are closed into
+                  the trace (the drivers — zero numerics change); arrays
+                  mean per-solve / per-lane tolerances as runtime data (the
+                  serve engine's heterogeneous requests).
+    """
+    t0: jnp.ndarray
+    t1: jnp.ndarray
+    t: jnp.ndarray
+    x: Pytree
+    h: jnp.ndarray
+    n_accepted: jnp.ndarray
+    n_attempts: jnp.ndarray
+    n_fevals: jnp.ndarray
+    xs: Pytree
+    ts: jnp.ndarray
+    hs: jnp.ndarray
+    rtol: Optional[jnp.ndarray] = None
+    atol: Optional[jnp.ndarray] = None
+
+    @property
+    def batched(self) -> bool:
+        return jnp.ndim(self.t) == 1
+
+    @property
+    def lanes(self) -> Optional[int]:
+        return jnp.shape(self.t)[0] if self.batched else None
+
+
+def _commit_row(col, val, idx, do):
+    """Masked write of ``val`` into row ``idx`` of a checkpoint buffer.
+
+    Touches only row idx (read-select-write), so a trial step costs
+    O(state), not an O(max_steps * state) whole-buffer select.  ``col`` is
+    a whole (max_steps, ...) buffer for a single trajectory, or ONE lane's
+    column under the vmap in ``_commit_lanes``.  ``idx`` may equal
+    max_steps for an exhausted lane: the dynamic read/write clamps to the
+    last row and ``do`` is necessarily False there, so the write is the
+    identity.
+    """
+    cur = jax.lax.dynamic_index_in_dim(col, idx, 0, keepdims=False)
+    new = jnp.where(do, val.astype(col.dtype), cur)
+    return jax.lax.dynamic_update_index_in_dim(col, new, idx, 0)
+
+
+_commit_lanes = jax.vmap(_commit_row, in_axes=(1, 0, 0, 0), out_axes=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveStepper:
+    """The PI-controlled adaptive solver as an explicit state machine.
+
+    Static configuration (the vector field, the tableau, the controller
+    config, the combine backend) lives here; everything dynamic lives in
+    the ``SolverState`` each method consumes and returns.  ``params`` stays
+    an explicit argument of ``advance``/``run`` — never closed over — so
+    jitted engine steps take it as a real (cacheable, non-baked) input.
+
+    The controller rules are the ones documented on ``rk_solve_adaptive``
+    (core/rk.py): per-trial clamp with an unclamped carry, dtype-aware
+    termination, non-finite-h bailout, per-lane masking when batched.
+    """
+    f: VectorField
+    tab: ButcherTableau
+    cfg: AdaptiveConfig
+    combine_backend: str = "auto"
+
+    def __post_init__(self):
+        if self.tab.b_err is None:
+            raise ValueError(
+                f"tableau {self.tab.name} has no embedded error estimate")
+
+    @property
+    def combiner(self) -> StageCombiner:
+        return get_combiner(self.tab, self.combine_backend)
+
+    # -- lifecycle ----------------------------------------------------------
+    def init_state(self, x0, t0, t1, h0=None, *,
+                   lanes: Optional[int] = None,
+                   rtol=None, atol=None) -> SolverState:
+        """Fresh state at t0.  ``lanes=B`` builds a lane-batched state (x0
+        leaves carry lane axis 0); ``h0`` seeds the controller with a step
+        MAGNITUDE (e.g. the previous SaveAt segment's h_final), falling
+        back to ``cfg.initial_step`` when absent or zero; ``rtol``/``atol``
+        (scalars or (B,)) opt into tolerances-as-data."""
+        cfg = self.cfg
+        dtype = jnp.result_type(float)
+        shape = () if lanes is None else (lanes,)
+        t0 = jnp.broadcast_to(jnp.asarray(t0, dtype=dtype), shape)
+        t1 = jnp.broadcast_to(jnp.asarray(t1, dtype=dtype), shape)
+        direction = jnp.sign(t1 - t0)
+        h0_abs = jnp.abs(jnp.broadcast_to(
+            jnp.asarray(cfg.initial_step if h0 is None else h0, dtype),
+            shape))
+        h = direction * jnp.where(h0_abs > 0, h0_abs,
+                                  jnp.asarray(cfg.initial_step, dtype))
+        xs = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((cfg.max_steps,) + jnp.shape(l), l.dtype),
+            x0)
+        counter = jnp.zeros(shape, jnp.int32)
+        return SolverState(
+            t0=t0, t1=t1, t=t0, x=x0, h=h,
+            n_accepted=counter, n_attempts=counter, n_fevals=counter,
+            xs=xs,
+            ts=jnp.zeros((cfg.max_steps,) + shape, dtype),
+            hs=jnp.zeros((cfg.max_steps,) + shape, dtype),
+            rtol=(None if rtol is None
+                  else jnp.broadcast_to(jnp.asarray(rtol, dtype), shape)),
+            atol=(None if atol is None
+                  else jnp.broadcast_to(jnp.asarray(atol, dtype), shape)))
+
+    def lanes_active(self, state: SolverState):
+        """Per-lane liveness: () bool or (B,) bool.  A lane is active until
+        it lands within the dtype-aware resolution of t1, exhausts a
+        budget, or its h carry goes non-finite (a NaN-poisoned lane costs
+        one doomed trial, then drops out instead of spinning
+        max_attempts)."""
+        cfg = self.cfg
+        direction = jnp.sign(state.t1 - state.t0)
+        t_res = _time_resolution(state.t0, state.t1, state.t.dtype)
+        return (direction * (state.t1 - state.t) > t_res) \
+            & (state.n_accepted < cfg.max_steps) \
+            & (state.n_attempts < cfg.max_attempts) \
+            & jnp.isfinite(state.h)
+
+    def is_done(self, state: SolverState):
+        return jnp.logical_not(jnp.any(self.lanes_active(state)))
+
+    def advance(self, state: SolverState, params) -> SolverState:
+        """ONE attempted step: trial at the clamped step, per-lane (or
+        scalar) error norm, accept/reject, commit of accepted checkpoints,
+        controller update.  Pure; inactive lanes (done, exhausted, or free
+        engine slots) pass through untouched, so driving ``advance`` past
+        completion is the identity on the state."""
+        cfg, tab = self.cfg, self.tab
+        batched = state.batched
+        err_exp = -1.0 / (tab.err_order + 1.0)
+        direction = jnp.sign(state.t1 - state.t0)
+        t, x, h = state.t, state.x, state.h
+        active = self.lanes_active(state)
+        # clamp the TRIAL step so we land exactly on t1; the carried h
+        # stays unclamped (see rk_solve_adaptive's docstring).
+        clamped = jnp.abs(h) > jnp.abs(state.t1 - t)
+        h_eff = direction * jnp.minimum(jnp.abs(h), jnp.abs(state.t1 - t))
+        if batched:
+            x_next, err = jax.vmap(
+                lambda x_l, t_l, h_l: rk_step(
+                    self.f, tab, x_l, t_l, h_l, params, self.combiner,
+                    with_error=True))(x, t, h_eff)
+        else:
+            x_next, err = rk_step(self.f, tab, x, t, h_eff, params,
+                                  self.combiner, with_error=True)
+        rtol = cfg.rtol if state.rtol is None else state.rtol
+        atol = cfg.atol if state.atol is None else state.atol
+        if batched:
+            enorm = _error_norm_lanes(err, x, x_next, rtol, atol)
+        else:
+            enorm = _error_norm(err, x, x_next, rtol, atol)
+        accept = enorm <= 1.0
+        factor = jnp.clip(cfg.safety * jnp.power(jnp.maximum(enorm, 1e-10),
+                                                 err_exp),
+                          cfg.min_factor, cfg.max_factor)
+        # clamped landing steps never contaminate the carried step: an
+        # ACCEPTED one keeps the natural h, a REJECTED one shrinks from the
+        # unclamped h (not from h_eff — the t1 gap is not the controller's
+        # step; shrinking from it collapses the carry for continuations).
+        h_new = jnp.where(accept & clamped, h, h * factor)
+        h = jnp.where(active, h_new, h)    # inactive lanes freeze the carry
+        do = active & accept
+        n_acc = state.n_accepted
+        commit = _commit_lanes if batched else _commit_row
+        xs = jax.tree_util.tree_map(
+            lambda buf, val: commit(buf, val, n_acc, do), state.xs, x)
+        ts = commit(state.ts, t, n_acc, do)
+        hs = commit(state.hs, h_eff, n_acc, do)
+        t = jnp.where(do, t + h_eff, t)
+        x = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(lane_bcast(do, a), b, a), x, x_next)
+        fevals = tab.s + (1 if tab.err_uses_fsal else 0)
+        return state._replace(
+            t=t, x=x, h=h,
+            n_accepted=n_acc + do.astype(jnp.int32),
+            n_attempts=state.n_attempts + active.astype(jnp.int32),
+            n_fevals=state.n_fevals + active.astype(jnp.int32) * fevals,
+            xs=xs, ts=ts, hs=hs)
+
+    def run(self, state: SolverState, params) -> SolverState:
+        """Drive ``advance`` until ``is_done``: ONE lax.while_loop whose
+        carry IS the SolverState.  This is the whole driver."""
+        return jax.lax.while_loop(
+            lambda s: jnp.any(self.lanes_active(s)),
+            lambda s: self.advance(s, params), state)
+
+    def succeeded(self, state: SolverState):
+        direction = jnp.sign(state.t1 - state.t0)
+        t_res = _time_resolution(state.t0, state.t1, state.t.dtype)
+        return jnp.logical_not(direction * (state.t1 - state.t) > t_res)
+
+    def finalize(self, state: SolverState):
+        """Freeze a state into the driver-facing solution tuple
+        (AdaptiveSolution, or BatchedAdaptiveSolution for a lane-batched
+        state).  The state stays valid — finalize is a view, not a
+        consume."""
+        cls = BatchedAdaptiveSolution if state.batched else AdaptiveSolution
+        return cls(state.x, state.xs, state.ts, state.hs, state.n_accepted,
+                   state.n_fevals, self.succeeded(state), state.h,
+                   state.n_attempts)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-grid stepper.
+# ---------------------------------------------------------------------------
+
+class FixedSolverState(NamedTuple):
+    """Between-steps state of an N-equal-steps fixed-grid solve: the clock
+    is ``(t0, h, n)`` (t_n = t0 + n*h is derived, never accumulated), the
+    checkpoints land in preallocated (n_steps, ...) buffers.  A registered
+    pytree, pausable/resumable exactly like ``SolverState``."""
+    t0: jnp.ndarray
+    h: jnp.ndarray
+    n: jnp.ndarray        # int32: steps taken so far
+    x: Pytree
+    xs: Pytree            # (n_steps, ...) checkpoints x_0..x_{N-1}
+    ts: jnp.ndarray       # (n_steps,)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedStepper:
+    """N equal steps as a state machine.  ``run`` is a lax.scan over
+    ``advance`` (scan, not while_loop: the fixed driver must stay
+    reverse-differentiable for DirectBackprop / RematStep / RematSolve)."""
+    f: VectorField
+    tab: ButcherTableau
+    n_steps: int
+    combine_backend: str = "auto"
+
+    @property
+    def combiner(self) -> StageCombiner:
+        return get_combiner(self.tab, self.combine_backend)
+
+    def init_state(self, x0, t0, t1) -> FixedSolverState:
+        t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
+        t1 = jnp.asarray(t1, dtype=t0.dtype)
+        h = (t1 - t0) / self.n_steps
+        xs = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((self.n_steps,) + jnp.shape(l), l.dtype),
+            x0)
+        return FixedSolverState(
+            t0=t0, h=h, n=jnp.int32(0), x=x0, xs=xs,
+            ts=jnp.zeros((self.n_steps,), t0.dtype))
+
+    def is_done(self, state: FixedSolverState):
+        return state.n >= self.n_steps
+
+    def advance(self, state: FixedSolverState, params) -> FixedSolverState:
+        """One fixed step: checkpoint the pre-step state, step without the
+        embedded error estimate (no controller to consume it)."""
+        t = state.t0 + state.n.astype(state.t0.dtype) * state.h
+        x_next, _ = rk_step(self.f, self.tab, state.x, t, state.h, params,
+                            self.combiner, with_error=False)
+        xs = jax.tree_util.tree_map(
+            lambda buf, val: jax.lax.dynamic_update_index_in_dim(
+                buf, val.astype(buf.dtype), state.n, 0), state.xs, state.x)
+        ts = jax.lax.dynamic_update_index_in_dim(state.ts, t, state.n, 0)
+        return state._replace(x=x_next, n=state.n + 1, xs=xs, ts=ts)
+
+    def run(self, state: FixedSolverState, params) -> FixedSolverState:
+        def body(s, _):
+            return self.advance(s, params), None
+
+        state, _ = jax.lax.scan(body, state, None, length=self.n_steps)
+        return state
+
+    def finalize(self, state: FixedSolverState) -> FixedSolution:
+        return FixedSolution(state.x, state.xs, state.ts, state.h)

@@ -1,0 +1,17 @@
+"""Continuous-batching ODE solve serving (the JetStream slot model).
+
+``SolveEngine`` drives the SAME ``AdaptiveStepper.advance`` as the offline
+drivers over a lane-batched masked ``SolverState``: requests are inserted
+into free lanes of the RUNNING state at step boundaries, finished lanes are
+harvested and freed, and the state grows through AOT-compiled lane buckets
+as offered load rises.  See docs/serving.md.
+"""
+from .engine import (EngineConfig, Request, Result, SolveEngine,
+                     naive_sequential_solve, serve_timed)
+from .stream import latency_summary, poisson_arrivals, synthetic_stream
+
+__all__ = [
+    "EngineConfig", "Request", "Result", "SolveEngine",
+    "naive_sequential_solve", "serve_timed", "synthetic_stream",
+    "poisson_arrivals", "latency_summary",
+]

@@ -1,0 +1,22 @@
+"""Suite-wide fixtures.
+
+The whole suite runs in ONE process, and every eager custom-VJP call plus
+every jitted helper leaves a live compiled executable in JAX's caches.  On
+this CPU jaxlib that accumulation has a hard native ceiling: past a few
+hundred tests' worth of executables, the next large eager compile (the
+13-stage dopri8 symplectic backward scan is the biggest single unit)
+segfaults inside XLA's LLVM JIT — deterministically at whatever test
+happens to sit past the threshold, while the same test passes in any
+smaller selection.  Dropping the caches at module boundaries keeps the
+live-executable footprint bounded by the largest single module instead of
+the whole suite; cross-module cache reuse is almost nil anyway (each
+module compiles its own fields/methods), so the wall-time cost is noise.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_cache():
+    yield
+    jax.clear_caches()

@@ -272,6 +272,8 @@ def test_committed_budgets_cover_every_enumerated_case():
         expected.add(f"{case.key}:value")
         if case.differentiable:
             expected.add(f"{case.key}:grad")
+    # plus the serve engine's audited advance entry point (report.py)
+    expected.add("serve/engine/dopri5/advance:value")
     assert set(budgets) == expected
     assert all(isinstance(v, int) and v > 0 for v in budgets.values())
 

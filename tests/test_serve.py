@@ -1,0 +1,150 @@
+"""The continuous-batching solve engine (repro.serve) — ISSUE 8.
+
+Pins the three claims docs/serving.md makes:
+
+* EQUIVALENCE — every request served out of the shared slot state gets
+  the same answer it would get served ALONE (any bucket size), bit for
+  bit: lane masking, bucket growth, tolerances-as-data, and mid-flight
+  neighbors must all be invisible in the numbers.  Against the scalar
+  ``rk_solve_adaptive`` driver the controller trajectory is pinned
+  exactly (identical accept/reject sequence: n_accepted, n_fevals) and
+  the floats to tight tolerance — the lane-batched advance and the
+  rank-0 while-body fuse differently in XLA (see tests/test_stepper.py).
+* CONTINUOUS BATCHING — requests really are inserted into a RUNNING
+  batch (not phase-locked cohorts), and the slot state grows through the
+  configured buckets as demand rises.
+* IN-PLACE UPDATE — the AOT advance actually donates the slot state:
+  the previous step's buffers are consumed, not copied.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import AdaptiveConfig
+from repro.core.rk import rk_solve_adaptive
+from repro.core.tableau import get_tableau
+from repro.serve import (EngineConfig, Request, SolveEngine,
+                         naive_sequential_solve, synthetic_stream)
+
+TAB = get_tableau("dopri5")
+CFG = AdaptiveConfig(rtol=1e-6, atol=1e-8, max_steps=128, initial_step=0.05)
+DIM = 3
+
+PARAMS = {"w": jax.random.normal(jax.random.PRNGKey(0), (DIM, DIM)) * 0.5,
+          "b": jax.random.normal(jax.random.PRNGKey(1), (DIM,)) * 0.1}
+
+
+def field(x, t, p):
+    return jnp.tanh(x @ p["w"] + p["b"]) - 0.3 * x * jnp.sin(t)
+
+
+def make_engine(buckets=(2, 4), check_every=1):
+    return SolveEngine(field, TAB, CFG, PARAMS,
+                       x0_template=jnp.zeros((DIM,)),
+                       engine_cfg=EngineConfig(buckets=buckets,
+                                               check_every=check_every))
+
+
+def solo(req: Request, buckets=(2,)):
+    """The bitwise reference: the same request served alone."""
+    return make_engine(buckets=buckets).run([req])[0]
+
+
+def driver_reference(req: Request):
+    cfg = dataclasses.replace(CFG, rtol=req.rtol, atol=req.atol)
+    return rk_solve_adaptive(field, TAB, req.x0, req.t0, req.t1, PARAMS, cfg)
+
+
+def check_request(results, rid, req):
+    got = results[rid]
+    alone = solo(req)
+    assert got.succeeded and alone.succeeded
+    assert np.array_equal(np.asarray(got.x_final),
+                          np.asarray(alone.x_final)), rid
+    assert (got.n_accepted, got.n_fevals, got.n_attempts) == \
+        (alone.n_accepted, alone.n_fevals, alone.n_attempts), rid
+    ref = driver_reference(req)
+    assert got.n_accepted == int(ref.n_accepted), rid
+    assert got.n_fevals == int(ref.n_fevals), rid
+    assert np.allclose(np.asarray(got.x_final), np.asarray(ref.x_final),
+                       rtol=1e-9, atol=1e-9), rid
+
+
+def test_engine_matches_single_solves():
+    reqs = synthetic_stream(6, DIM, seed=7)
+    engine = make_engine()
+    results = engine.run(reqs)
+    assert sorted(results) == list(range(6))
+    for rid, req in enumerate(reqs):
+        check_request(results, rid, req)
+    # with 6 requests and a 2-lane starting bucket the engine must have
+    # inserted into a running batch (continuous batching, not cohorts)
+    assert engine.stats["inserted_while_running"] > 0
+
+
+def test_insertion_into_running_batch_single_bucket():
+    """A fixed 2-lane state serving 5 requests forces evict-then-insert
+    against live lanes; late arrivals join mid-flight neighbours."""
+    reqs = synthetic_stream(5, DIM, seed=11)
+    engine = make_engine(buckets=(2,))
+    results = engine.run(reqs)
+    assert len(results) == 5
+    assert engine.stats["lanes"] == 2
+    assert engine.stats["inserted_while_running"] >= 3
+    for rid, req in enumerate(reqs):
+        check_request(results, rid, req)
+
+
+def test_bucket_growth_under_demand():
+    reqs = synthetic_stream(6, DIM, seed=3)
+    engine = make_engine(buckets=(2, 4, 8))
+    assert engine.stats["lanes"] == 2
+    results = engine.run(reqs)
+    assert engine.stats["lanes"] == 8      # demand 6 -> next bucket up
+    assert len(results) == 6
+    for rid, req in enumerate(reqs):
+        check_request(results, rid, req)
+
+
+def test_advance_donates_slot_state():
+    engine = make_engine(buckets=(2,))
+    engine.submit(synthetic_stream(1, DIM, seed=5)[0])
+    engine._fill()
+    before = engine._state
+    engine._state = engine._advance[engine._lanes](before, engine.params)
+    assert before.t.is_deleted()           # buffer consumed, not copied
+    assert before.ts.is_deleted()
+
+
+def test_submit_rejects_mismatched_pytree():
+    engine = make_engine()
+    bad = Request(x0={"x": jnp.zeros((DIM,))}, t0=0.0, t1=1.0,
+                  rtol=1e-6, atol=1e-8)
+    with pytest.raises(ValueError, match="pytree structure"):
+        engine.submit(bad)
+
+
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        EngineConfig(buckets=(4, 4, 8))
+    with pytest.raises(ValueError, match="check_every"):
+        EngineConfig(check_every=0)
+
+
+def test_naive_baseline_agrees_with_engine():
+    reqs = synthetic_stream(4, DIM, seed=9)
+    engine = make_engine()
+    results = engine.run(reqs)
+    naive, lat = naive_sequential_solve(field, TAB, CFG, PARAMS, reqs)
+    assert len(lat) == 4
+    for rid, sol in enumerate(naive):
+        assert results[rid].n_accepted == int(sol.n_accepted)
+        assert results[rid].n_fevals == int(sol.n_fevals)
+        assert np.allclose(np.asarray(results[rid].x_final),
+                           np.asarray(sol.x_final),
+                           rtol=1e-9, atol=1e-9), rid
