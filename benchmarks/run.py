@@ -16,6 +16,8 @@ artifact, not just job logs.  CI uploads ``BENCH_*.json`` from the
   bench_saveat_compile  -> SaveAt compile time vs observation count
   bench_batch           -> masked per-lane batching vs lockstep (batch_axis)
   bench_serve           -> continuous-batching engine vs sequential solving
+  bench_shard           -> mesh-sharded lanes vs 1 device (subprocess: the
+                           forced host-device flag must precede jax init)
   roofline              -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
 
 Usage:
@@ -48,6 +50,34 @@ def _tolerance_subprocess():
     if out.returncode != 0:
         sys.stderr.write(out.stderr[-2000:])
         raise RuntimeError("bench_tolerance failed")
+
+
+def _shard_subprocess():
+    # bench_shard needs forced host devices, and the device-count flag only
+    # takes effect BEFORE jax initializes its backend — this process's jax
+    # is already up single-device, so the bench runs standalone.  The child
+    # writes its own BENCH_bench_shard.json; lift its rows into this
+    # process's records so the parent dump (which overwrites that file)
+    # preserves them.
+    env = dict(os.environ)
+    if "--xla_force_host_platform_device_count" not in \
+            env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_shard"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    sys.stdout.write(out.stdout)
+    if out.returncode != 0:
+        sys.stderr.write(out.stderr[-2000:])
+        raise RuntimeError("bench_shard failed")
+    try:
+        with open("BENCH_bench_shard.json") as fh:
+            for rec in json.load(fh).get("rows", []):
+                common.record(**rec)
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
 
 
 def _dump_bench_json(name: str, wall_s: float, ok: bool) -> None:
@@ -88,6 +118,7 @@ def main() -> None:
         ("bench_saveat_compile", bench_saveat_compile.main),
         ("bench_batch", bench_batch.main),
         ("bench_serve", bench_serve.main),
+        ("bench_shard", _shard_subprocess),
         ("roofline", roofline.main),
     ]
     only = args[0] if args else None

@@ -27,7 +27,8 @@ from repro.core.api import GRADIENT_REGISTRY
 
 __all__ = ["Case", "enumerate_cases", "case_jaxprs", "mlp_field",
            "make_probe", "ensure_x64", "CUSTOM_VJP_STRATEGIES",
-           "engine_advance_probe"]
+           "engine_advance_probe", "sharded_solve_probe",
+           "SHARDED_PROBE_CELLS"]
 
 # strategies whose adaptive drivers are custom_vjp (reverse-differentiable
 # across the while_loop); everything else is fixed-grid-grad only
@@ -162,6 +163,55 @@ def engine_advance_probe(method: str = "dopri5", *, dim: int = 32,
     closed = jax.make_jaxpr(stepper.advance)(state, params)
     donated = frozenset(range(len(jax.tree_util.tree_leaves(state))))
     return closed, donated
+
+
+# (strategy, stepping) cells audited by the collective-count rule — the
+# custom-VJP strategies' mesh-reachable t1 cells (fixed once: the fixed
+# grid is strategy-independent at the shard_map boundary)
+SHARDED_PROBE_CELLS = (("symplectic", "adaptive"), ("adjoint", "adaptive"),
+                       ("symplectic", "fixed"))
+
+
+def sharded_solve_probe(strategy: str, stepping_kind: str,
+                        method: str = "dopri5", *, dim: int = 4,
+                        hidden: int = 16, batch: int = 3, n_steps: int = 3,
+                        max_steps: int = 8, dtype=jnp.float64):
+    """One ``solve(mesh=...)`` cell as jaxprs for the collective-count rule.
+
+    Traces on a (1,)-device ``("data",)`` mesh: shard_map emits the SAME
+    jaxpr structure (body nesting, transpose-inserted psums) for a 1-way
+    mesh as for an N-way one, so the communication contract is auditable
+    in a single-device CI lane.  Returns
+    ``{"value": ClosedJaxpr, "grad": ClosedJaxpr, "param_shapes": [...]}``
+    — the shapes feed the rule's one-psum-per-theta-leaf check.
+    """
+    ensure_x64()
+    from repro.launch.mesh import make_lane_mesh
+    mesh = make_lane_mesh((1,))
+    field = mlp_field(True)
+    x0 = jnp.zeros((batch, dim), dtype)
+    params = {"w1": jnp.zeros((dim, hidden), dtype),
+              "b1": jnp.zeros((hidden,), dtype),
+              "bt": jnp.zeros((hidden,), dtype),
+              "w2": jnp.zeros((hidden, dim), dtype),
+              "b2": jnp.zeros((dim,), dtype)}
+    stepping = n_steps if stepping_kind == "fixed" else \
+        AdaptiveConfig(max_steps=max_steps)
+
+    def value_fn(x0, params):
+        sol = solve(field, x0, params, method=method, gradient=strategy,
+                    stepping=stepping, backend="jnp", batch_axis=0,
+                    mesh=mesh)
+        return sol.ys
+
+    def loss_fn(x0, params):
+        return jnp.sum(jnp.sin(value_fn(x0, params)) ** 2)
+
+    return {"value": jax.make_jaxpr(value_fn)(x0, params),
+            "grad": jax.make_jaxpr(jax.grad(loss_fn,
+                                            argnums=(0, 1)))(x0, params),
+            "param_shapes": [jnp.shape(p) for p in
+                             jax.tree_util.tree_leaves(params)]}
 
 
 def case_jaxprs(case: Case, **knobs) -> Dict[str, Optional[object]]:

@@ -12,11 +12,12 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from .traversal import (aval_bytes, closed_constants, count_eqns, iter_eqns)
+from .traversal import (aval_bytes, closed_constants, collective_eqns,
+                        count_eqns, iter_eqns)
 
 __all__ = ["Finding", "RULE_REGISTRY", "register_rule", "dtype_findings",
            "constant_findings", "donation_findings", "budget_findings",
-           "flatness_findings"]
+           "flatness_findings", "collective_findings"]
 
 ERROR, WARNING, INFO = "error", "warning", "info"
 
@@ -159,6 +160,55 @@ def donation_findings(closed, case: str = "<jaxpr>",
             f"{matched} output buffer(s) ({bytes_total / 2**10:.0f} KiB) "
             "match undonated input shapes/dtypes: donating the inputs "
             "(jit donate_argnums) would reuse their buffers"))
+    return out
+
+
+@register_rule("collective-count")
+def collective_findings(closed, case: str = "<jaxpr>",
+                        kind: str = "value",
+                        param_shapes=None) -> List[Finding]:
+    """The sharded solve's communication contract, proved jaxpr-level.
+
+    Shard-local replay means the mesh path may communicate ONLY to reduce
+    the replicated-param cotangents:
+
+    * a ``value`` jaxpr must contain NO real collective (the forward and
+      every per-lane controller decision are shard-local);
+    * a ``grad`` jaxpr must contain EXACTLY one real ``psum`` per param
+      leaf, each reducing an operand of that leaf's shape — and nothing
+      else.  Any extra collective means lane state (grids, h carries,
+      masks) started crossing devices: the exactness argument in
+      docs/parallel.md is void.  Any missing psum means a param cotangent
+      is silently shard-partial.
+
+    ``psum`` markers with empty axes (shard_map transpose no-ops on
+    lane-sharded cotangents) are ignored by ``collective_eqns``.
+    """
+    colls = collective_eqns(closed.jaxpr)
+    out = []
+    non_psum = [c for c in colls if c[0] != "psum"]
+    if non_psum:
+        out.append(Finding(
+            "collective-count", ERROR, case,
+            f"{kind} jaxpr contains non-psum collectives "
+            f"{sorted({c[0] for c in non_psum})}: lane state is crossing "
+            "devices (shard-local replay contract, docs/parallel.md)"))
+    psum_shapes = sorted(shape for name, _, shapes in colls
+                         if name == "psum" for shape in shapes)
+    if kind == "value":
+        if psum_shapes:
+            out.append(Finding(
+                "collective-count", ERROR, case,
+                f"value jaxpr contains {len(psum_shapes)} real psum(s): "
+                "the sharded forward must be collective-free"))
+        return out
+    expected = sorted(tuple(s) for s in (param_shapes or []))
+    if psum_shapes != expected:
+        out.append(Finding(
+            "collective-count", ERROR, case,
+            f"grad jaxpr psum operand shapes {psum_shapes} != one per "
+            f"param leaf {expected}: the backward must all-reduce exactly "
+            "the theta cotangents and nothing else"))
     return out
 
 

@@ -34,11 +34,18 @@ import numpy as np
 
 __all__ = ["subjaxprs", "eqn_subjaxprs", "count_eqns", "iter_eqns",
            "EqnContext", "aval_bytes", "peak_resident_bytes", "dce",
-           "closed_constants", "LOOP_PRIMITIVES"]
+           "closed_constants", "LOOP_PRIMITIVES", "COLLECTIVE_PRIMITIVES",
+           "collective_eqns"]
 
 # primitives whose sub-jaxprs execute once per iteration — eqns inside them
 # are "hot" for the dtype rule (a demotion there repeats every step)
 LOOP_PRIMITIVES = frozenset({"scan", "while"})
+
+# cross-device communication primitives (what the collective-count rule
+# audits inside shard_map bodies)
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "pmax", "pmin", "ppermute", "pshuffle", "all_gather",
+    "all_to_all", "reduce_scatter", "pbroadcast"})
 
 
 def subjaxprs(v) -> List:
@@ -96,6 +103,28 @@ def iter_eqns(jaxpr, _depth: int = 0,
         depth = _depth + (1 if prim in LOOP_PRIMITIVES else 0)
         for sub in eqn_subjaxprs(eqn):
             yield from iter_eqns(sub, depth, _path + (prim,))
+
+
+def collective_eqns(jaxpr) -> List[Tuple[str, Tuple, Tuple]]:
+    """Every REAL cross-device collective in the nest, as
+    ``(primitive_name, axes, operand_shapes)`` tuples.
+
+    ``psum`` eqns with empty ``axes`` are skipped: shard_map's transpose
+    inserts them as structural no-op markers on cotangents of
+    lane-sharded inputs — they lower to nothing and move no bytes.
+    """
+    out = []
+    for eqn, _ in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name not in COLLECTIVE_PRIMITIVES:
+            continue
+        axes = tuple(eqn.params.get("axes", ()) or ())
+        if name == "psum" and not axes:
+            continue
+        out.append((name, axes,
+                    tuple(tuple(getattr(v.aval, "shape", ()))
+                          for v in eqn.invars)))
+    return out
 
 
 def _is_var(atom) -> bool:

@@ -16,7 +16,7 @@ from .api import (GRADIENT_REGISTRY, STEPPING_KINDS, SAVEAT_KINDS,
                   ContinuousAdjoint, DirectBackprop, GradientStrategy,
                   RematSolve, RematStep, SaveAt, Solution, SymplecticAdjoint,
                   as_gradient, batched_capability_matrix, capability_matrix,
-                  register_gradient, solve)
+                  mesh_capability_matrix, register_gradient, solve)
 from .odeint import GRAD_MODES, TS_MODES, odeint, odeint_with_stats
 from .rk import (ON_FAILURE_POLICIES, AdaptiveConfig, AdaptiveSolution,
                  BatchedAdaptiveSolution, apply_on_failure,
@@ -44,6 +44,7 @@ __all__ = [
     "DirectBackprop", "RematStep", "RematSolve", "ContinuousAdjoint",
     "register_gradient", "as_gradient", "GRADIENT_REGISTRY",
     "capability_matrix", "batched_capability_matrix",
+    "mesh_capability_matrix",
     "STEPPING_KINDS", "SAVEAT_KINDS",
     "odeint", "odeint_with_stats", "GRAD_MODES", "TS_MODES",
     "AdaptiveConfig", "AdaptiveSolution", "BatchedAdaptiveSolution",

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
                  apply_on_failure_lanes, lane_count, rk_solve_adaptive,
                  rk_solve_adaptive_batched, rk_solve_fixed,
+                 time_lift as _lift, time_unlift as _unlift,
                  time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
@@ -42,37 +43,51 @@ def _aug_dynamics(f: VectorField):
     return aug
 
 
+# All custom_vjp drivers below take their scalar times as (1,)-shaped
+# arrays (see rk.time_lift); the public odeint_* wrappers keep the scalar
+# signature and lift at the boundary.
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def odeint_adjoint(f: VectorField, tab: ButcherTableau, n_steps: int,
-                   backward_steps_multiplier: int, combine_backend: str,
-                   x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+def _odeint_adjoint_r1(f: VectorField, tab: ButcherTableau, n_steps: int,
+                       backward_steps_multiplier: int, combine_backend: str,
+                       x0, t0r, t1r, params):
+    sol = rk_solve_fixed(f, tab, x0, _unlift(t0r), _unlift(t1r), n_steps,
+                         params,
                          combine_backend)
     return sol.x_final
 
 
-def _adj_fwd(f, tab, n_steps, bmult, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+def odeint_adjoint(f: VectorField, tab: ButcherTableau, n_steps: int,
+                   backward_steps_multiplier: int, combine_backend: str,
+                   x0, t0, t1, params):
+    return _odeint_adjoint_r1(f, tab, n_steps, backward_steps_multiplier,
+                              combine_backend, x0, _lift(t0), _lift(t1),
+                              params)
+
+
+def _adj_fwd(f, tab, n_steps, bmult, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_fixed(f, tab, x0, _unlift(t0r), _unlift(t1r), n_steps,
+                         params,
                          combine_backend)
     # O(M): only the final state is retained (plus params; t0/t1 are the
     # PRIMAL time values so the bwd can emit dtype-matched cotangents).
-    return sol.x_final, (sol.x_final, t0, t1, params)
+    return sol.x_final, (sol.x_final, t0r, t1r, params)
 
 
 def _adj_bwd(f, tab, n_steps, bmult, combine_backend, res, lam_N):
-    xN, t0, t1, params = res
+    xN, t0r, t1r, params = res
     aug = _aug_dynamics(f)
     gtheta0 = jax.tree_util.tree_map(jnp.zeros_like, params)
     state_N = (xN, lam_N, gtheta0)
     # integrate backward: t goes t1 -> t0 (negative step).
-    sol = rk_solve_fixed(aug, tab, state_N, t1, t0,
+    sol = rk_solve_fixed(aug, tab, state_N, _unlift(t1r), _unlift(t0r),
                          n_steps * bmult, params, combine_backend)
     x0_rec, lam0, gtheta = sol.x_final
     # zero time cotangents in the dtypes the caller actually passed
-    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
+    return (lam0, _time_zero(t0r), _time_zero(t1r), gtheta)
 
 
-odeint_adjoint.defvjp(_adj_fwd, _adj_bwd)
+_odeint_adjoint_r1.defvjp(_adj_fwd, _adj_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -81,35 +96,46 @@ odeint_adjoint.defvjp(_adj_fwd, _adj_bwd)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def odeint_adjoint_adaptive(f: VectorField, tab: ButcherTableau,
-                            cfg: AdaptiveConfig, bwd_cfg: AdaptiveConfig,
-                            combine_backend: str, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+def _odeint_adjoint_adaptive_r1(f: VectorField, tab: ButcherTableau,
+                                cfg: AdaptiveConfig, bwd_cfg: AdaptiveConfig,
+                                combine_backend: str, x0, t0r, t1r, params):
+    sol = rk_solve_adaptive(f, tab, x0, _unlift(t0r), _unlift(t1r), params,
+                            cfg,
                             combine_backend)
     return apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
 
 
-def _adja_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+def odeint_adjoint_adaptive(f: VectorField, tab: ButcherTableau,
+                            cfg: AdaptiveConfig, bwd_cfg: AdaptiveConfig,
+                            combine_backend: str, x0, t0, t1, params):
+    return _odeint_adjoint_adaptive_r1(f, tab, cfg, bwd_cfg,
+                                       combine_backend, x0, _lift(t0),
+                                       _lift(t1), params)
+
+
+def _adja_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_adaptive(f, tab, x0, _unlift(t0r), _unlift(t1r), params,
+                            cfg,
                             combine_backend)
     x_final = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
-    return x_final, (x_final, t0, t1, params)
+    return x_final, (x_final, t0r, t1r, params)
 
 
 def _adja_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
-    xN, t0, t1, params = res
+    xN, t0r, t1r, params = res
     aug = _aug_dynamics(f)
     gtheta0 = jax.tree_util.tree_map(jnp.zeros_like, params)
-    sol = rk_solve_adaptive(aug, tab, (xN, lam_N, gtheta0), t1, t0,
+    sol = rk_solve_adaptive(aug, tab, (xN, lam_N, gtheta0), _unlift(t1r),
+                            _unlift(t0r),
                             params, bwd_cfg, combine_backend)
     # a truncated backward solve is a silently wrong gradient: poison it
     # (or raise) per the backward config's policy too.
     _, lam0, gtheta = apply_on_failure(sol.x_final, sol.succeeded,
                                        bwd_cfg.on_failure)
-    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
+    return (lam0, _time_zero(t0r), _time_zero(t1r), gtheta)
 
 
-odeint_adjoint_adaptive.defvjp(_adja_fwd, _adja_bwd)
+_odeint_adjoint_adaptive_r1.defvjp(_adja_fwd, _adja_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -122,33 +148,47 @@ odeint_adjoint_adaptive.defvjp(_adja_fwd, _adja_bwd)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _odeint_adjoint_adaptive_batched_r1(f: VectorField, tab: ButcherTableau,
+                                        cfg: AdaptiveConfig,
+                                        bwd_cfg: AdaptiveConfig,
+                                        combine_backend: str,
+                                        x0, t0r, t1r, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, _unlift(t0r), _unlift(t1r),
+                                    params, cfg,
+                                    combine_backend)
+    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+
+
 def odeint_adjoint_adaptive_batched(f: VectorField, tab: ButcherTableau,
                                     cfg: AdaptiveConfig,
                                     bwd_cfg: AdaptiveConfig,
                                     combine_backend: str,
                                     x0, t0, t1, params):
-    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
-                                    combine_backend)
-    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+    return _odeint_adjoint_adaptive_batched_r1(f, tab, cfg, bwd_cfg,
+                                               combine_backend, x0,
+                                               _lift(t0), _lift(t1), params)
 
 
-def _adjab_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+def _adjab_fwd(f, tab, cfg, bwd_cfg, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, _unlift(t0r), _unlift(t1r),
+                                    params, cfg,
                                     combine_backend)
     x_final = apply_on_failure_lanes(sol.x_final, sol.succeeded,
                                      cfg.on_failure)
-    return x_final, (x_final, t0, t1, params)
+    return x_final, (x_final, t0r, t1r, params)
 
 
 def _adjab_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
-    xN, t0, t1, params = res
+    xN, t0r, t1r, params = res
     B = lane_count(xN)
     aug = _aug_dynamics(f)
     gtheta0 = jax.tree_util.tree_map(
         lambda p: jnp.zeros((B,) + jnp.shape(p), jnp.asarray(p).dtype),
         params)
-    sol = rk_solve_adaptive_batched(aug, tab, (xN, lam_N, gtheta0), t1, t0,
-                                    params, bwd_cfg, combine_backend)
+    sol = rk_solve_adaptive_batched(aug, tab, (xN, lam_N, gtheta0),
+                                    _unlift(t1r), _unlift(t0r), params,
+                                            bwd_cfg,
+                                    combine_backend)
     # a lane whose backward solve was truncated is a silently wrong
     # gradient for THAT lane: poison per lane (the lane-summed grad-theta
     # inherits the poison — one bad lane taints the shared parameter
@@ -157,7 +197,7 @@ def _adjab_bwd(f, tab, cfg, bwd_cfg, combine_backend, res, lam_N):
         sol.x_final, sol.succeeded, bwd_cfg.on_failure)
     gtheta = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0),
                                     gtheta_lanes)
-    return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
+    return (lam0, _time_zero(t0r), _time_zero(t1r), gtheta)
 
 
-odeint_adjoint_adaptive_batched.defvjp(_adjab_fwd, _adjab_bwd)
+_odeint_adjoint_adaptive_batched_r1.defvjp(_adjab_fwd, _adjab_bwd)

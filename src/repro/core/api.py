@@ -708,6 +708,17 @@ def batched_capability_matrix() -> Dict[str, Dict[Tuple[str, str], bool]]:
             for name, cls in sorted(GRADIENT_REGISTRY.items())}
 
 
+def mesh_capability_matrix() -> Dict[str, Dict[Tuple[str, str], bool]]:
+    """Same table for ``solve(..., batch_axis=0, mesh=...)``: the batched
+    cells restricted to t1|ts saveat.  The mesh path shard_maps the SAME
+    batched hooks (``fixed``/``fixed_saveat``/``adaptive_*_with_stats``),
+    so every batched t1/ts cell is mesh-legal; dense output is not wired
+    through shard_map."""
+    return {name: {cell: ok and cell[1] in ("t1", "ts")
+                   for cell, ok in cells.items()}
+            for name, cells in batched_capability_matrix().items()}
+
+
 def _check_capability(gradient: GradientStrategy, stepping_kind: str,
                       saveat_kind: str, batched: bool = False) -> None:
     cells = (type(gradient).batched_cells() if batched
@@ -753,7 +764,9 @@ def solve(f: VectorField, x0, params, *,
           stepping: Union[int, AdaptiveConfig] = 16,
           backend: str = "auto",
           t0=0.0,
-          batch_axis: Optional[int] = None) -> Solution:
+          batch_axis: Optional[int] = None,
+          mesh=None,
+          sharding=None) -> Solution:
     """Integrate ``dx/dt = f(x, t, params)`` and return a ``Solution``.
 
     f          — vector field over arbitrary pytrees; times are not
@@ -779,6 +792,18 @@ def solve(f: VectorField, x0, params, *,
                  ``stats``/``success`` become per-lane (B,) arrays.  Times
                  (``t0``, ``saveat``) stay shared.  Only axis 0 is
                  supported.  See docs/batching.md.
+    mesh       — a ``jax.sharding.Mesh``: shard the lane axis over the
+                 mesh's data axes (the longest divisible prefix of
+                 ``("pod", "data")``) with ``shard_map``.  Requires
+                 ``batch_axis=0`` and saveat t1|ts.  Per-lane controller
+                 state stays shard-local; both exact backward passes
+                 replay shard-locally with the param-cotangent psum as
+                 the only real collective, and ``stats`` gains
+                 ``shard_steps`` / ``load_imbalance``.  See
+                 docs/parallel.md.
+    sharding   — params placement under ``mesh``: None (replicated,
+                 default), ``"auto"`` (``repro.parallel`` path rules), or
+                 an explicit ``PartitionSpec`` pytree/prefix.
     """
     tab = get_tableau(method) if isinstance(method, str) else method
     resolve_backend(backend)  # eager validation, single source
@@ -808,6 +833,18 @@ def solve(f: VectorField, x0, params, *,
     _check_capability(gradient, stepping_kind, saveat.kind, batched)
     t0 = jnp.asarray(t0, dtype=jnp.result_type(float))
     ctx = _Ctx(f, tab, n_steps, adaptive, backend)
+
+    if mesh is None and sharding is not None:
+        raise ValueError("solve(sharding=...) requires mesh=: the params "
+                         "placement only means something on a mesh")
+    if mesh is not None:
+        if not batched:
+            raise ValueError(
+                "solve(mesh=...) shards the lane axis over the mesh's data "
+                "axes: pass batch_axis=0 (a single trajectory has no lane "
+                "axis to shard — see docs/parallel.md)")
+        return _solve_sharded(gradient, ctx, tab, n_steps, stepping_kind,
+                              saveat, x0, t0, params, lanes, mesh, sharding)
 
     if saveat.kind == "t1":
         t1 = jnp.asarray(saveat.t1, dtype=t0.dtype)
@@ -839,5 +876,72 @@ def solve(f: VectorField, x0, params, *,
         ys, stats, success = gradient.dense_saveat_with_stats(
             ctx, x0, t0, ts, params)
 
+    final = jax.tree_util.tree_map(lambda l: l[-1], ys)
+    return Solution(ys=ys, final_state=final, stats=stats, success=success)
+
+
+def _solve_sharded(gradient: GradientStrategy, ctx: _Ctx,
+                   tab: ButcherTableau, n_steps: Optional[int],
+                   stepping_kind: str, saveat: SaveAt, x0, t0, params,
+                   lanes: int, mesh, sharding) -> Solution:
+    """The mesh path of ``solve``: run the SAME dispatch as the unsharded
+    batched solve, but as a shard-local body under ``shard_map`` — each
+    shard solves its contiguous lane block exactly as a single-device call
+    would (bitwise: values, per-lane stats, grids, h carries).  Lives here
+    rather than in ``repro.parallel`` so the dispatch stays next to the
+    unsharded branch it must mirror; the mesh mechanics (lane-axis
+    selection, specs, load stats) come from ``repro.parallel.solve``.
+    """
+    from ..parallel import solve as _pps  # parallel imports core: lazy
+    axes = _pps.lane_axes(mesh, lanes, require=True)
+    n_shards = _pps.shard_count(mesh, axes)
+    lanes_local = lanes // n_shards
+    # rank-0 param leaves stay lifted to (1,) through the whole shard-local
+    # driver (they are saved as custom_vjp residuals, and jax 0.4.37's
+    # shard_map transpose cannot handle rank-0 residuals/inputs); only the
+    # user field sees the original scalars.
+    params, _restore, _lifted = _pps.lift_scalar_params(params)
+    if _lifted:
+        _f = ctx.f
+        ctx = _Ctx(lambda x, t, p: _f(x, t, _restore(p)), ctx.tab,
+                   ctx.n_steps, ctx.adaptive, ctx.backend)
+    pspec = _pps.resolve_param_specs(params, mesh, sharding)
+
+    if saveat.kind == "t1":
+        t1 = jnp.asarray(saveat.t1, dtype=t0.dtype)
+        if stepping_kind == "fixed":
+            def body(x0_, params_):
+                ys = gradient.fixed(ctx, x0_, t0, t1, params_)
+                stats, success = _fixed_stats(tab, n_steps, 1, lanes_local)
+                return ys, stats, success
+        else:
+            def body(x0_, params_):
+                return gradient.adaptive_batched_with_stats(
+                    ctx, x0_, t0, t1, params_)
+        ys, stats, success = _pps.sharded_solve_triple(
+            body, mesh, axes, x0, params, params_spec=pspec, ys_lane_axis=0)
+        stats = _pps.with_shard_load_stats(stats, n_shards)
+        return Solution(ys=ys, final_state=ys, stats=stats, success=success)
+
+    if saveat.kind != "ts":
+        # unreachable today (_check_capability rejects batched dense), but
+        # the mesh path must never silently fall through to a new kind.
+        raise ValueError(
+            f"solve(mesh=...) supports saveat t1|ts; got {saveat.kind!r}")
+    ts = _as_ts(saveat.ts, t0.dtype, t0)
+    if stepping_kind == "fixed":
+        def body(x0_, params_):
+            ys = gradient.fixed_saveat(ctx, x0_, t0, ts, params_)
+            stats, success = _fixed_stats(tab, n_steps, ts.shape[0],
+                                          lanes_local)
+            return ys, stats, success
+    else:
+        def body(x0_, params_):
+            return gradient.adaptive_saveat_batched_with_stats(
+                ctx, x0_, t0, ts, params_)
+    # SaveAt stacks are time-major: lanes live on axis 1 of the ys leaves.
+    ys, stats, success = _pps.sharded_solve_triple(
+        body, mesh, axes, x0, params, params_spec=pspec, ys_lane_axis=1)
+    stats = _pps.with_shard_load_stats(stats, n_shards)
     final = jax.tree_util.tree_map(lambda l: l[-1], ys)
     return Solution(ys=ys, final_state=final, stats=stats, success=success)

@@ -62,6 +62,35 @@ def time_zero_cotangent(t):
     return jnp.zeros_like(jnp.asarray(t))
 
 
+def time_lift(t):
+    """Lift a scalar time to a ``(1,)``-shaped array for a custom_vjp driver.
+
+    The gradient drivers' custom_vjp boundaries must not expose RANK-0
+    differentiable primal inputs: ``shard_map``'s transpose rule assigns
+    backward out_names from the forward in_names, and on this jax a rank-0
+    cotangent paired with a non-empty name set fails the spec check
+    (``_SpecError``) — so ``jax.grad`` through
+    ``shard_map(solve, ...)`` dies on scalar ``t0``/``t1``.  Every driver
+    therefore takes its scalar times as ``(1,)`` arrays internally (the
+    public wrappers lift here, the driver reads them back via
+    ``time_unlift``), which keeps the custom_vjp's cotangent avals rank-1
+    and sharding-legible.  Rank-1 times — ``SaveAt.ts``, and the (B,)
+    per-lane horizons the batched drivers accept — are already lifted and
+    pass through untouched.
+    """
+    t = jnp.asarray(t)
+    return jnp.reshape(t, (1,)) if t.ndim == 0 else t
+
+
+def time_unlift(tr):
+    """Read a ``time_lift``-ed time back inside a driver: a ``(1,)``
+    lifted scalar becomes the scalar again; per-lane ``(B,)`` arrays pass
+    through.  (A genuine per-lane ``(1,)`` horizon for a B=1 batch also
+    reads back scalar — the drivers broadcast shared times over lanes, so
+    the solve is identical.)"""
+    return tr[0] if tr.shape == (1,) else tr
+
+
 def tree_scale_add(base: Pytree, terms) -> Pytree:
     """base + sum_i coef_i * tree_i via chained per-leaf AXPYs.
 

@@ -48,7 +48,9 @@ from .rk import (AdaptiveConfig, VectorField, apply_on_failure,
                  rk_solve_adaptive_batched,
                  rk_solve_adaptive_batched_saveat_stacked,
                  rk_solve_adaptive_saveat_stacked, rk_solve_fixed, rk_stages,
-                 segment_starts, time_zero_cotangent as _time_zero)
+                 segment_starts, time_lift as _lift,
+                 time_unlift as _unlift,
+                 time_zero_cotangent as _time_zero)
 from .tableau import ButcherTableau
 
 Pytree = Any
@@ -114,20 +116,32 @@ def symplectic_step_adjoint(f: VectorField, tab: ButcherTableau,
 # Fixed-grid driver
 # ---------------------------------------------------------------------------
 
+# All custom_vjp drivers below take their scalar times as (1,)-shaped
+# arrays (see rk.time_lift); the public odeint_* wrappers keep the scalar
+# signature and lift at the boundary.
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def odeint_symplectic(f: VectorField, tab: ButcherTableau, n_steps: int,
-                      combine_backend: str, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+def _odeint_symplectic_r1(f: VectorField, tab: ButcherTableau, n_steps: int,
+                          combine_backend: str, x0, t0r, t1r, params):
+    sol = rk_solve_fixed(f, tab, x0, _unlift(t0r), _unlift(t1r), n_steps,
+                         params,
                          combine_backend)
     return sol.x_final
 
 
-def _sym_fwd(f, tab, n_steps, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_fixed(f, tab, x0, t0, t1, n_steps, params,
+def odeint_symplectic(f: VectorField, tab: ButcherTableau, n_steps: int,
+                      combine_backend: str, x0, t0, t1, params):
+    return _odeint_symplectic_r1(f, tab, n_steps, combine_backend,
+                                 x0, _lift(t0), _lift(t1), params)
+
+
+def _sym_fwd(f, tab, n_steps, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_fixed(f, tab, x0, _unlift(t0r), _unlift(t1r), n_steps,
+                         params,
                          combine_backend)
     # Residuals = Algorithm 1's checkpoints (plus the primal times, kept
     # only so the backward pass can emit dtype-matched zero cotangents).
-    return sol.x_final, (sol.xs, sol.ts, sol.h, params, t0, t1)
+    return sol.x_final, (sol.xs, sol.ts, sol.h, params, t0r, t1r)
 
 
 def _sym_bwd(f, tab, n_steps, combine_backend, res, lam_N):
@@ -146,7 +160,7 @@ def _sym_bwd(f, tab, n_steps, combine_backend, res, lam_N):
     return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
-odeint_symplectic.defvjp(_sym_fwd, _sym_bwd)
+_odeint_symplectic_r1.defvjp(_sym_fwd, _sym_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -154,18 +168,27 @@ odeint_symplectic.defvjp(_sym_fwd, _sym_bwd)
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def odeint_symplectic_adaptive(f: VectorField, tab: ButcherTableau,
-                               cfg: AdaptiveConfig, combine_backend: str,
-                               x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+def _odeint_symplectic_adaptive_r1(f: VectorField, tab: ButcherTableau,
+                                   cfg: AdaptiveConfig, combine_backend: str,
+                                   x0, t0r, t1r, params):
+    sol = rk_solve_adaptive(f, tab, x0, _unlift(t0r), _unlift(t1r), params,
+                            cfg,
                             combine_backend)
     return apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
 
 
-def _syma_fwd(f, tab, cfg, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_adaptive(f, tab, x0, t0, t1, params, cfg,
+def odeint_symplectic_adaptive(f: VectorField, tab: ButcherTableau,
+                               cfg: AdaptiveConfig, combine_backend: str,
+                               x0, t0, t1, params):
+    return _odeint_symplectic_adaptive_r1(f, tab, cfg, combine_backend,
+                                          x0, _lift(t0), _lift(t1), params)
+
+
+def _syma_fwd(f, tab, cfg, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_adaptive(f, tab, x0, _unlift(t0r), _unlift(t1r), params,
+                            cfg,
                             combine_backend)
-    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0, t1)
+    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0r, t1r)
     x_final = apply_on_failure(sol.x_final, sol.succeeded, cfg.on_failure)
     return x_final, res
 
@@ -197,7 +220,7 @@ def _syma_bwd(f, tab, cfg, combine_backend, res, lam_N):
     return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
-odeint_symplectic_adaptive.defvjp(_syma_fwd, _syma_bwd)
+_odeint_symplectic_adaptive_r1.defvjp(_syma_fwd, _syma_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -220,7 +243,7 @@ odeint_symplectic_adaptive.defvjp(_syma_fwd, _syma_bwd)
 # the number of observations — see docs/adaptive.md.
 # ---------------------------------------------------------------------------
 
-def _sym_saveat_solve(f, tab, n_steps, combine_backend, x0, t0, ts, params):
+def _sym_saveat_solve(f, tab, n_steps, combine_backend, x0, t0r, ts, params):
     """Forward segmented fixed-grid solve; returns (obs, residuals)."""
 
     def body(x, seg):
@@ -230,11 +253,19 @@ def _sym_saveat_solve(f, tab, n_steps, combine_backend, x0, t0, ts, params):
         return sol.x_final, (sol.x_final, sol.xs, sol.ts, sol.h)
 
     _, (obs, seg_xs, seg_ts, seg_hs) = jax.lax.scan(
-        body, x0, (segment_starts(t0, ts), ts))
-    return obs, (seg_xs, seg_ts, seg_hs, params, t0, ts)
+        body, x0, (segment_starts(_unlift(t0r), ts), ts))
+    return obs, (seg_xs, seg_ts, seg_hs, params, t0r, ts)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _odeint_symplectic_saveat_r1(f: VectorField, tab: ButcherTableau,
+                                 n_steps: int, combine_backend: str,
+                                 x0, t0r, ts, params):
+    obs, _ = _sym_saveat_solve(f, tab, n_steps, combine_backend,
+                               x0, t0r, ts, params)
+    return obs
+
+
 def odeint_symplectic_saveat(f: VectorField, tab: ButcherTableau,
                              n_steps: int, combine_backend: str,
                              x0, t0, ts, params):
@@ -243,14 +274,13 @@ def odeint_symplectic_saveat(f: VectorField, tab: ButcherTableau,
     Returns the solution stacked over the observation times (leading dim
     len(ts) per leaf).
     """
-    obs, _ = _sym_saveat_solve(f, tab, n_steps, combine_backend,
-                               x0, t0, ts, params)
-    return obs
+    return _odeint_symplectic_saveat_r1(f, tab, n_steps, combine_backend,
+                                        x0, _lift(t0), ts, params)
 
 
-def _sym_saveat_fwd(f, tab, n_steps, combine_backend, x0, t0, ts, params):
+def _sym_saveat_fwd(f, tab, n_steps, combine_backend, x0, t0r, ts, params):
     return _sym_saveat_solve(f, tab, n_steps, combine_backend,
-                             x0, t0, ts, params)
+                             x0, t0r, ts, params)
 
 
 def _sym_saveat_bwd(f, tab, n_steps, combine_backend, res, obs_bar):
@@ -281,17 +311,27 @@ def _sym_saveat_bwd(f, tab, n_steps, combine_backend, res, obs_bar):
     return (lam, _time_zero(t0), _time_zero(ts), gtheta)
 
 
-odeint_symplectic_saveat.defvjp(_sym_saveat_fwd, _sym_saveat_bwd)
+_odeint_symplectic_saveat_r1.defvjp(_sym_saveat_fwd, _sym_saveat_bwd)
 
 
-def _syma_saveat_solve(f, tab, cfg, combine_backend, x0, t0, ts, params):
+def _syma_saveat_solve(f, tab, cfg, combine_backend, x0, t0r, ts, params):
     obs, sols = rk_solve_adaptive_saveat_stacked(
-        f, tab, x0, t0, ts, params, cfg, combine_backend)
-    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0, ts)
+        f, tab, x0, _unlift(t0r), ts, params, cfg, combine_backend)
+    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0r, ts)
     return obs, res
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _odeint_symplectic_saveat_adaptive_r1(f: VectorField,
+                                          tab: ButcherTableau,
+                                          cfg: AdaptiveConfig,
+                                          combine_backend: str,
+                                          x0, t0r, ts, params):
+    obs, _ = _syma_saveat_solve(f, tab, cfg, combine_backend,
+                                x0, t0r, ts, params)
+    return obs
+
+
 def odeint_symplectic_saveat_adaptive(f: VectorField, tab: ButcherTableau,
                                       cfg: AdaptiveConfig,
                                       combine_backend: str,
@@ -303,14 +343,13 @@ def odeint_symplectic_saveat_adaptive(f: VectorField, tab: ButcherTableau,
     landing step each instead of a collapsed restart.  Failed segments
     follow cfg.on_failure.
     """
-    obs, _ = _syma_saveat_solve(f, tab, cfg, combine_backend,
-                                x0, t0, ts, params)
-    return obs
+    return _odeint_symplectic_saveat_adaptive_r1(
+        f, tab, cfg, combine_backend, x0, _lift(t0), ts, params)
 
 
-def _syma_saveat_fwd(f, tab, cfg, combine_backend, x0, t0, ts, params):
+def _syma_saveat_fwd(f, tab, cfg, combine_backend, x0, t0r, ts, params):
     return _syma_saveat_solve(f, tab, cfg, combine_backend,
-                              x0, t0, ts, params)
+                              x0, t0r, ts, params)
 
 
 def _syma_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
@@ -351,7 +390,8 @@ def _syma_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
     return (lam, _time_zero(t0), _time_zero(ts), gtheta)
 
 
-odeint_symplectic_saveat_adaptive.defvjp(_syma_saveat_fwd, _syma_saveat_bwd)
+_odeint_symplectic_saveat_adaptive_r1.defvjp(_syma_saveat_fwd,
+                                             _syma_saveat_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -468,21 +508,32 @@ def _masked_lanes_alg2_scan(f, tab, combiner, params, max_steps,
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _odeint_symplectic_adaptive_batched_r1(f: VectorField,
+                                           tab: ButcherTableau,
+                                           cfg: AdaptiveConfig,
+                                           combine_backend: str,
+                                           x0, t0r, t1r, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, _unlift(t0r), _unlift(t1r),
+                                    params, cfg,
+                                    combine_backend)
+    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+
+
 def odeint_symplectic_adaptive_batched(f: VectorField, tab: ButcherTableau,
                                        cfg: AdaptiveConfig,
                                        combine_backend: str,
                                        x0, t0, t1, params):
     """Batch-native adaptive solve (lane axis 0) with the exact symplectic
     adjoint replaying each lane's own accepted grid."""
-    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
-                                    combine_backend)
-    return apply_on_failure_lanes(sol.x_final, sol.succeeded, cfg.on_failure)
+    return _odeint_symplectic_adaptive_batched_r1(
+        f, tab, cfg, combine_backend, x0, _lift(t0), _lift(t1), params)
 
 
-def _symab_fwd(f, tab, cfg, combine_backend, x0, t0, t1, params):
-    sol = rk_solve_adaptive_batched(f, tab, x0, t0, t1, params, cfg,
+def _symab_fwd(f, tab, cfg, combine_backend, x0, t0r, t1r, params):
+    sol = rk_solve_adaptive_batched(f, tab, x0, _unlift(t0r), _unlift(t1r),
+                                    params, cfg,
                                     combine_backend)
-    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0, t1)
+    res = (sol.xs, sol.ts, sol.hs, sol.n_accepted, params, t0r, t1r)
     x_final = apply_on_failure_lanes(sol.x_final, sol.succeeded,
                                      cfg.on_failure)
     return x_final, res
@@ -497,17 +548,25 @@ def _symab_bwd(f, tab, cfg, combine_backend, res, lam_N):
     return (lam0, _time_zero(t0), _time_zero(t1), gtheta)
 
 
-odeint_symplectic_adaptive_batched.defvjp(_symab_fwd, _symab_bwd)
+_odeint_symplectic_adaptive_batched_r1.defvjp(_symab_fwd, _symab_bwd)
 
 
-def _symab_saveat_solve(f, tab, cfg, combine_backend, x0, t0, ts, params):
+def _symab_saveat_solve(f, tab, cfg, combine_backend, x0, t0r, ts, params):
     obs, sols = rk_solve_adaptive_batched_saveat_stacked(
-        f, tab, x0, t0, ts, params, cfg, combine_backend)
-    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0, ts)
+        f, tab, x0, _unlift(t0r), ts, params, cfg, combine_backend)
+    res = (sols.xs, sols.ts, sols.hs, sols.n_accepted, params, t0r, ts)
     return obs, res
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _odeint_symplectic_saveat_adaptive_batched_r1(
+        f: VectorField, tab: ButcherTableau, cfg: AdaptiveConfig,
+        combine_backend: str, x0, t0r, ts, params):
+    obs, _ = _symab_saveat_solve(f, tab, cfg, combine_backend,
+                                 x0, t0r, ts, params)
+    return obs
+
+
 def odeint_symplectic_saveat_adaptive_batched(
         f: VectorField, tab: ButcherTableau, cfg: AdaptiveConfig,
         combine_backend: str, x0, t0, ts, params):
@@ -519,14 +578,13 @@ def odeint_symplectic_saveat_adaptive_batched(
     boundary, and replays every lane's own accepted grid inside the
     segment.  Exact per lane to rounding.
     """
-    obs, _ = _symab_saveat_solve(f, tab, cfg, combine_backend,
-                                 x0, t0, ts, params)
-    return obs
+    return _odeint_symplectic_saveat_adaptive_batched_r1(
+        f, tab, cfg, combine_backend, x0, _lift(t0), ts, params)
 
 
-def _symab_saveat_fwd(f, tab, cfg, combine_backend, x0, t0, ts, params):
+def _symab_saveat_fwd(f, tab, cfg, combine_backend, x0, t0r, ts, params):
     return _symab_saveat_solve(f, tab, cfg, combine_backend,
-                               x0, t0, ts, params)
+                               x0, t0r, ts, params)
 
 
 def _symab_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
@@ -549,5 +607,5 @@ def _symab_saveat_bwd(f, tab, cfg, combine_backend, res, obs_bar):
     return (lam, _time_zero(t0), _time_zero(ts), gtheta)
 
 
-odeint_symplectic_saveat_adaptive_batched.defvjp(_symab_saveat_fwd,
-                                                 _symab_saveat_bwd)
+_odeint_symplectic_saveat_adaptive_batched_r1.defvjp(_symab_saveat_fwd,
+                                                     _symab_saveat_bwd)

@@ -1,5 +1,13 @@
 from .mesh_rules import LOGICAL_RULES, make_sharder
 from .shardings import batch_specs, cache_specs, param_specs, state_specs
+from .solve import (DATA_AXES, batched_solution_specs, lane_axes, lane_spec,
+                    lift_scalar_params, resolve_param_specs, shard_count,
+                    sharded_solve_triple, solver_state_specs,
+                    with_shard_load_stats)
 
 __all__ = ["LOGICAL_RULES", "make_sharder", "param_specs", "state_specs",
-           "batch_specs", "cache_specs"]
+           "batch_specs", "cache_specs", "DATA_AXES", "lane_axes",
+           "lane_spec", "lift_scalar_params", "shard_count",
+           "batched_solution_specs", "solver_state_specs",
+           "resolve_param_specs", "sharded_solve_triple",
+           "with_shard_load_stats"]

@@ -154,15 +154,21 @@ def state_specs(state, mesh, *, ep: bool = False, zero1: bool = True,
 
 
 def batch_specs(batch, mesh):
-    """Shard every batch leaf's leading (batch) dim over (pod, data)."""
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Shard every batch leaf's leading (batch) dim over (pod, data).
+
+    A batch dim that is not divisible by the FULL dp product falls back to
+    the longest divisible prefix of ("pod", "data") — with a warning —
+    instead of silently replicating (solve.lane_axes is the single source
+    of that rule); only when NO prefix divides does the leaf replicate.
+    """
+    from .solve import lane_axes
 
     def spec(leaf):
         nd = np.ndim(leaf)
         if nd == 0:
             return P()
-        if np.shape(leaf)[0] % int(np.prod([mesh.shape[a] for a in dp])) \
-                != 0:
+        dp = lane_axes(mesh, int(np.shape(leaf)[0]))
+        if not dp:
             return P(*([None] * nd))
         return P(dp, *([None] * (nd - 1)))
 

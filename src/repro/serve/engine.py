@@ -74,6 +74,11 @@ class Result(NamedTuple):
 class EngineConfig:
     buckets: tuple = (4, 8, 16)   # lane counts advance is AOT-compiled for
     check_every: int = 1          # advance calls between eviction sweeps
+    mesh: Any = None              # jax.sharding.Mesh: slot state lives
+    #                               lane-sharded over the mesh's data axes
+    #                               (repro.parallel.solver_state_specs),
+    #                               params replicated; every bucket must
+    #                               fill whole lane shards.
 
     def __post_init__(self):
         if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
@@ -81,6 +86,17 @@ class EngineConfig:
                              f"{self.buckets}")
         if self.check_every < 1:
             raise ValueError("check_every must be >= 1")
+        if self.mesh is not None:
+            from ..parallel.solve import lane_axes, shard_count
+            axes = lane_axes(self.mesh, self.buckets[0], require=True)
+            n = shard_count(self.mesh, axes)
+            bad = [B for B in self.buckets if B % n]
+            if bad:
+                raise ValueError(
+                    f"EngineConfig.mesh shards lanes {n}-way over axes "
+                    f"{axes}, but bucket(s) {bad} are not divisible by {n}:"
+                    " every AOT bucket's slot state must fill whole lane "
+                    "shards")
 
 
 def _map_lanes(state: SolverState, f_lane, f_buf) -> SolverState:
@@ -115,6 +131,15 @@ class SolveEngine:
         self.stepper = AdaptiveStepper(f, tab, cfg, combine_backend)
         self.cfg = cfg
         self.engine_cfg = engine_cfg or EngineConfig()
+        mesh = self.engine_cfg.mesh
+        self._mesh = mesh
+        if mesh is not None:
+            from ..parallel.solve import lane_axes
+            self._lane_shard_axes = lane_axes(
+                mesh, self.engine_cfg.buckets[0], require=True)
+            from jax.sharding import NamedSharding, PartitionSpec
+            params = jax.device_put(
+                params, NamedSharding(mesh, PartitionSpec()))
         self.params = params
         self._template = jax.tree_util.tree_map(
             lambda l: jnp.zeros(jnp.shape(l), jnp.asarray(l).dtype),
@@ -155,7 +180,25 @@ class SolveEngine:
         # per leaf at construction breaks the aliases; the advance/insert
         # executables keep them distinct from then on (donated pass-through
         # outputs alias their own distinct inputs).
-        return jax.tree_util.tree_map(lambda l: l.copy(), state)
+        return self._commit(
+            jax.tree_util.tree_map(lambda l: l.copy(), state))
+
+    def _commit(self, state: SolverState) -> SolverState:
+        """Land a slot state on its home layout: lane-sharded over the
+        config mesh's data axes when one is set (docs/parallel.md), the
+        identity otherwise.  Called wherever a state is (re)built outside
+        the compiled path — construction, growth, post-insert — so the
+        AOT-compiled ``advance`` always sees the shardings it was lowered
+        for."""
+        if self._mesh is None:
+            return state
+        from jax.sharding import NamedSharding, PartitionSpec
+        from ..parallel.solve import solver_state_specs
+        specs = solver_state_specs(state, self._lane_shard_axes)
+        shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(self._mesh, s), specs,
+            is_leaf=lambda s: isinstance(s, PartitionSpec))
+        return jax.device_put(state, shardings)
 
     def _grow(self, new_B: int) -> None:
         B = self._lanes
@@ -168,7 +211,7 @@ class SolveEngine:
             return jnp.concatenate([l, b], axis=1)
 
         s, b = self._state, blank
-        self._state = SolverState(
+        self._state = self._commit(SolverState(
             t0=pad0(s.t0, b.t0), t1=pad0(s.t1, b.t1), t=pad0(s.t, b.t),
             x=jax.tree_util.tree_map(pad0, s.x, b.x), h=pad0(s.h, b.h),
             n_accepted=pad0(s.n_accepted, b.n_accepted),
@@ -176,7 +219,7 @@ class SolveEngine:
             n_fevals=pad0(s.n_fevals, b.n_fevals),
             xs=jax.tree_util.tree_map(pad1, s.xs, b.xs),
             ts=pad1(s.ts, b.ts), hs=pad1(s.hs, b.hs),
-            rtol=pad0(s.rtol, b.rtol), atol=pad0(s.atol, b.atol))
+            rtol=pad0(s.rtol, b.rtol), atol=pad0(s.atol, b.atol)))
         self._lane_rid.extend([None] * (new_B - B))
 
     @property
@@ -255,9 +298,9 @@ class SolveEngine:
             if self._lane_rid[lane] is not None:
                 continue
             rid, req, t_sub = self._queue.popleft()
-            self._state = self._insert_fn(
+            self._state = self._commit(self._insert_fn(
                 self._state, lane, req.x0, req.t0, req.t1, req.rtol,
-                req.atol)
+                req.atol))
             self._lane_rid[lane] = rid
             self._pending_meta[rid] = t_sub
             if running:

@@ -12,11 +12,46 @@ live-executable footprint bounded by the largest single module instead of
 the whole suite; cross-module cache reuse is almost nil anyway (each
 module compiles its own fields/methods), so the wall-time cost is noise.
 """
+import os
+import pathlib
+import subprocess
+import sys
+
 import jax
 import pytest
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
 
 
 @pytest.fixture(autouse=True, scope="module")
 def _bounded_compile_cache():
     yield
     jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def run_sharded():
+    """Run a self-contained test script with N forced host devices.
+
+    ``--xla_force_host_platform_device_count`` only takes effect BEFORE jax
+    initializes its backend, and this suite's process initialized jax long
+    ago (single-device) — so every multi-device test runs its script in a
+    fresh subprocess with the flag set.  The script must be standalone
+    (imports included) and signal failure by raising; stdout is returned
+    for optional content assertions.
+    """
+    def run(source: str, devices: int = 8, timeout: int = 600) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={devices} "
+            + env.get("XLA_FLAGS", ""))
+        env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH",
+                                                            "")
+        proc = subprocess.run([sys.executable, "-c", source], env=env,
+                              capture_output=True, text=True,
+                              timeout=timeout)
+        assert proc.returncode == 0, (
+            f"sharded subprocess failed (rc={proc.returncode}):\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+        return proc.stdout
+    return run

@@ -274,6 +274,13 @@ def test_committed_budgets_cover_every_enumerated_case():
             expected.add(f"{case.key}:grad")
     # plus the serve engine's audited advance entry point (report.py)
     expected.add("serve/engine/dopri5/advance:value")
+    # plus the sharded-solve collective probes (report.py traces value AND
+    # grad of each cell on a (1,)-mesh)
+    from repro.analysis.cases import SHARDED_PROBE_CELLS
+    for strategy, stepping_kind in SHARDED_PROBE_CELLS:
+        key = f"parallel/{strategy}/dopri5/{stepping_kind}/t1/sharded"
+        expected.add(f"{key}:value")
+        expected.add(f"{key}:grad")
     assert set(budgets) == expected
     assert all(isinstance(v, int) and v > 0 for v in budgets.values())
 
