@@ -1,0 +1,119 @@
+"""Checkpoint cost: blocking save vs async stall, restore throughput.
+
+The checkpoint contract in numbers (docs/training.md):
+
+  * ``ckpt_save_blocking``    — full synchronous save wall time (host
+    transfer + file write + atomic publish);
+  * ``ckpt_save_async_stall`` — what the TRAIN LOOP pays for
+    ``save(..., block=False)``: the host transfer only, the file write
+    runs in a background thread;
+  * ``ckpt_overlap``          — a calibrated jitted compute loop timed
+    alone vs with a save in flight: the inflation factor is the real cost
+    async saving adds to a train step;
+  * ``ckpt_restore``          — ``Checkpointer.restore`` throughput in
+    MB/s, measured apart from any compute (pure IO + device_put).
+
+Run via ``python -m benchmarks.run [--smoke] bench_checkpoint``; rows land
+in BENCH_bench_checkpoint.json (uploaded by the CI bench-smoke lane).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import Checkpointer
+from . import common
+
+
+def _synthetic_state(size_mb: int):
+    """A params-like pytree of ``size_mb`` 1-MB f32 leaves."""
+    leaves = {f"w{i}": jnp.full((256, 1024), float(i + 1), jnp.float32)
+              for i in range(size_mb)}
+    state = {"params": leaves, "opt": {"step": jnp.int32(7)}}
+    jax.block_until_ready(state)
+    return state
+
+
+def main() -> None:
+    smoke = common.smoke()
+    size_mb = 4 if smoke else 128
+    iters = 2 if smoke else 4
+    state = _synthetic_state(size_mb)
+
+    d = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        sync = Checkpointer(d, keep=2, async_save=False)
+        sync.save(0, state)                       # warm the fs path
+        t0 = time.perf_counter()
+        for i in range(iters):
+            sync.save(i + 1, state)
+        t_block = (time.perf_counter() - t0) / iters
+        common.row("ckpt_save_blocking", t_block * 1e6,
+                   f"{size_mb}MB @ {size_mb / t_block:.0f}MB/s",
+                   size_mb=size_mb, mb_per_s=round(size_mb / t_block, 1))
+
+        anc = Checkpointer(d, keep=2, async_save=True)
+        stalls = []
+        for i in range(iters):
+            t0 = time.perf_counter()
+            anc.save(100 + i, state, block=False)
+            stalls.append(time.perf_counter() - t0)
+            anc.wait()
+        stall = min(stalls)      # best case = pure host transfer
+        common.row("ckpt_save_async_stall", stall * 1e6,
+                   f"{stall / t_block * 100:.0f}% of blocking",
+                   size_mb=size_mb,
+                   stall_vs_blocking=round(stall / t_block, 4))
+
+        # overlap: a compute loop calibrated to roughly one save's worth
+        # of work, timed alone vs with a background write in flight
+        dim = 256 if smoke else 1024
+        x = jnp.ones((dim, dim))
+        f = jax.jit(lambda a: jnp.tanh(a @ a) * 0.99)
+        f(x).block_until_ready()
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        t_call = max(time.perf_counter() - t0, 1e-6)
+        n = max(2, int(t_block / t_call))
+
+        def compute():
+            t0 = time.perf_counter()
+            y = x
+            for _ in range(n):
+                y = f(y)
+            jax.block_until_ready(y)
+            return time.perf_counter() - t0
+
+        compute()                                 # warm
+        t_alone = compute()
+        t0 = time.perf_counter()
+        anc.save(200, state, block=False)
+        t_with = compute()
+        anc.wait()
+        wall = time.perf_counter() - t0
+        common.row("ckpt_overlap", t_with * 1e6,
+                   f"compute inflation x{t_with / t_alone:.2f} "
+                   f"({n} calls); save+compute wall {wall * 1e3:.0f}ms",
+                   inflation=round(t_with / t_alone, 3),
+                   compute_alone_s=round(t_alone, 4),
+                   wall_s=round(wall, 4))
+
+        # restore throughput, apart from any compute
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            restored, step = sync.restore(state)
+            jax.block_until_ready(restored)
+        t_rest = (time.perf_counter() - t0) / iters
+        common.row("ckpt_restore", t_rest * 1e6,
+                   f"{size_mb}MB @ {size_mb / t_rest:.0f}MB/s",
+                   size_mb=size_mb, mb_per_s=round(size_mb / t_rest, 1))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

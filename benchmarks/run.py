@@ -16,6 +16,8 @@ artifact, not just job logs.  CI uploads ``BENCH_*.json`` from the
   bench_saveat_compile  -> SaveAt compile time vs observation count
   bench_batch           -> masked per-lane batching vs lockstep (batch_axis)
   bench_serve           -> continuous-batching engine vs sequential solving
+  bench_checkpoint      -> blocking vs async checkpoint save stall, overlap
+                           with compute, restore throughput (docs/training.md)
   bench_shard           -> mesh-sharded lanes vs 1 device (subprocess: the
                            forced host-device flag must precede jax init)
   roofline              -> EXPERIMENTS.md roofline (reads runs/dryrun.jsonl)
@@ -103,9 +105,9 @@ def main() -> None:
         print("# smoke mode: rot-check sizes, numbers are meaningless",
               flush=True)
 
-    from . import (bench_batch, bench_cnf, bench_combine, bench_orders,
-                   bench_physics, bench_rk_sweep, bench_saveat_compile,
-                   bench_serve, bench_steps, roofline)
+    from . import (bench_batch, bench_checkpoint, bench_cnf, bench_combine,
+                   bench_orders, bench_physics, bench_rk_sweep,
+                   bench_saveat_compile, bench_serve, bench_steps, roofline)
 
     benches = [
         ("bench_tolerance", _tolerance_subprocess),
@@ -118,6 +120,7 @@ def main() -> None:
         ("bench_saveat_compile", bench_saveat_compile.main),
         ("bench_batch", bench_batch.main),
         ("bench_serve", bench_serve.main),
+        ("bench_checkpoint", bench_checkpoint.main),
         ("bench_shard", _shard_subprocess),
         ("roofline", roofline.main),
     ]

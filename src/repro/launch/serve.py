@@ -26,18 +26,38 @@ def _lm_main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve the params from a TRAINING checkpoint "
+                    "(the full TrainState saved by repro.launch.train; "
+                    "pass the same --grad-mode/--node-method the training "
+                    "run used so the param pytree structures match)")
+    ap.add_argument("--grad-mode", default=None)
+    ap.add_argument("--node-method", default="euler")
     args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_arch, get_smoke_arch
+    from repro.configs.base import NodeConfig
     from repro.data.tokens import synthetic_lm_batch
     from repro.train import (TrainConfig, init_train_state,
                              make_decode_step, make_prefill_step)
 
     arch = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
+    if args.grad_mode:
+        arch = arch.with_(node=NodeConfig(mode="node",
+                                          method=args.node_method,
+                                          grad_mode=args.grad_mode))
     state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+    if args.ckpt_dir:
+        # train -> serve handoff: the fresh state is only the restore
+        # template (same arch => same pytree structure), every param is
+        # overwritten with the trained values
+        from repro.runtime import Checkpointer
+        state, ck_step = Checkpointer(args.ckpt_dir).restore(state)
+        print(f"[serve] restored params from {args.ckpt_dir} "
+              f"step {ck_step}")
     params = state["params"]
 
     max_len = args.prompt_len + args.gen_len

@@ -1,21 +1,35 @@
 """Distributed training driver with fault tolerance.
 
-    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b-smoke \
-        --steps 50 --ckpt-dir runs/ckpt --ckpt-every 10 [--resume]
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --epochs 3 --steps-per-epoch 20 --ckpt-dir runs/ckpt \
+        --ckpt-every 10 --metrics-out runs/metrics.jsonl [--resume]
 
-On boot: restores from the newest valid checkpoint if present (crash /
-preemption recovery); the data pipeline is keyed by step so the token
-stream resumes exactly.  Runs on whatever devices exist — a 1-CPU test, a
-256-chip pod, or the 512-chip multi-pod mesh (``--mesh``), resharding the
-checkpoint onto the current topology (elastic restart).
+The full train state — ``train.TrainState``: (params, AdamW state incl. the
+LR-schedule step, RNG key, data cursor, solver stats, compression error
+feedback) — is checkpointed as ONE pytree via ``runtime.Checkpointer`` with
+async saves overlapping the train step.  On boot the driver restores from
+the newest valid checkpoint if present (crash / preemption recovery);
+``--resume`` makes that mandatory (exit 3 when no checkpoint exists).  The
+data pipeline is keyed by step, so the token stream resumes exactly: the
+fault-injection harness (tests/test_failures.py) SIGKILLs this driver
+mid-epoch — including mid async save — and asserts the resumed
+loss/grad-norm trajectory is BIT-identical to an uninterrupted run.
 
-Real-TPU deployment flags (latency-hiding scheduler for collective/compute
-overlap, async collectives) are appended to XLA_FLAGS when --tpu-flags is
-passed; they are no-ops on CPU.
+``--metrics-out`` appends one JSON line per step (flushed, so a killed run
+leaves a complete prefix) — the harness and the CI train-smoke lane diff
+these files across kill/resume boundaries (tools/check_resume_divergence.py).
+
+Runs on whatever devices exist — a 1-CPU test, a 256-chip pod, or the
+512-chip multi-pod mesh (``--mesh``), resharding the checkpoint onto the
+current topology (elastic restart).  Real-TPU deployment flags
+(latency-hiding scheduler for collective/compute overlap, async
+collectives) are appended to XLA_FLAGS when --tpu-flags is passed; they are
+no-ops on CPU.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -33,7 +47,12 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke config")
-    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--steps", type=int, default=20,
+                    help="total steps (ignored when --steps-per-epoch is "
+                    "given)")
+    ap.add_argument("--epochs", type=int, default=1)
+    ap.add_argument("--steps-per-epoch", type=int, default=None,
+                    help="with --epochs: total = epochs * steps_per_epoch")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -47,18 +66,27 @@ def main(argv=None):
                     choices=["none", "bf16", "int8"])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true",
+                    help="REQUIRE a valid checkpoint in --ckpt-dir and "
+                    "boot from it (without this flag a present checkpoint "
+                    "is still used, but an empty dir starts fresh)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append one JSON line per step (step/epoch/loss/"
+                    "grad_norm/lr), flushed — for resume-divergence checks")
     ap.add_argument("--mesh", default="none",
                     choices=["none", "pod", "multipod", "debug"])
     ap.add_argument("--tpu-flags", action="store_true")
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="inject a failure (fault-tolerance demo)")
+    ap.add_argument("--step-delay-s", type=float, default=0.0,
+                    help="sleep after each step — paces the loop so the "
+                    "fault harness can SIGKILL mid-epoch deterministically")
     args = ap.parse_args(argv)
 
     if args.tpu_flags:
         os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + TPU_FLAGS
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import get_arch, get_smoke_arch
     from repro.configs.base import NodeConfig
@@ -67,9 +95,9 @@ def main(argv=None):
     from repro.optim import (CompressionConfig, cosine_schedule,
                              constant_schedule, wsd_schedule)
     from repro.parallel import make_sharder, state_specs
-    from repro.runtime import Checkpointer, RetryConfig, run_with_retries
+    from repro.runtime import Checkpointer, RetryConfig, mesh_shardings, \
+        run_with_retries
     from repro.train import TrainConfig, init_train_state, make_train_step
-    from jax.sharding import NamedSharding
 
     arch = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
     if args.grad_mode:
@@ -78,6 +106,14 @@ def main(argv=None):
                                           grad_mode=args.grad_mode))
     tcfg = TrainConfig(lr=args.lr, microbatches=args.microbatches,
                        compression=CompressionConfig(mode=args.compression))
+
+    if args.steps_per_epoch is not None:
+        total_steps = args.epochs * args.steps_per_epoch
+        steps_per_epoch = args.steps_per_epoch
+    else:
+        total_steps = args.steps
+        steps_per_epoch = max(1, (args.steps + args.epochs - 1)
+                              // args.epochs)
 
     mesh = None
     if args.mesh == "pod":
@@ -88,10 +124,10 @@ def main(argv=None):
         mesh = make_debug_mesh()
     shard = make_sharder(mesh)
 
-    sched = {"cosine": lambda: cosine_schedule(args.lr, 5, args.steps),
+    sched = {"cosine": lambda: cosine_schedule(args.lr, 5, total_steps),
              "wsd": lambda: wsd_schedule(args.lr, 5,
-                                         int(args.steps * 0.7),
-                                         int(args.steps * 0.25)),
+                                         int(total_steps * 0.7),
+                                         int(total_steps * 0.25)),
              "constant": lambda: constant_schedule(args.lr)}[args.schedule]()
 
     state = init_train_state(jax.random.PRNGKey(0), arch, tcfg)
@@ -100,23 +136,28 @@ def main(argv=None):
     if args.ckpt_dir:
         ckpt = Checkpointer(args.ckpt_dir, keep=3, async_save=True)
         latest = ckpt.latest_step()
+        if latest is None and args.resume:
+            print(f"[train] --resume: no valid checkpoint in "
+                  f"{args.ckpt_dir}", file=sys.stderr)
+            sys.exit(3)
         if latest is not None:
             shardings = None
             if mesh is not None:
-                specs = state_specs(state, mesh)
-                shardings = jax.tree_util.tree_map(
-                    lambda s: NamedSharding(mesh, s), specs,
-                    is_leaf=lambda x: isinstance(
-                        x, jax.sharding.PartitionSpec))
+                shardings = mesh_shardings(mesh, state_specs(state, mesh))
             state, start_step = ckpt.restore(state, shardings=shardings)
-            print(f"[train] resumed from step {start_step}")
+            # the data cursor IS the checkpoint step: the pipeline resumes
+            # the exact sample stream
+            assert int(state["data_step"]) == start_step, \
+                (int(state["data_step"]), start_step)
+            print(f"[train] resumed from step {start_step} "
+                  f"(epoch {start_step // steps_per_epoch})")
+    elif args.resume:
+        print("[train] --resume requires --ckpt-dir", file=sys.stderr)
+        sys.exit(3)
 
     step_fn = make_train_step(arch, tcfg, lr_fn=sched, shard=shard)
     if mesh is not None:
-        specs = state_specs(state, mesh)
-        state_sh = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), specs,
-            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        state_sh = mesh_shardings(mesh, state_specs(state, mesh))
         step_fn = jax.jit(step_fn, in_shardings=(state_sh, None),
                           out_shardings=(state_sh, None),
                           donate_argnums=(0,))
@@ -125,9 +166,16 @@ def main(argv=None):
 
     pipe = iter(TokenPipeline(args.global_batch, args.seq_len, arch.vocab,
                               start_step=start_step))
+    metrics_f = None
+    if args.metrics_out:
+        out_dir = os.path.dirname(args.metrics_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        metrics_f = open(args.metrics_out, "a")
 
     t0 = time.time()
-    for step in range(start_step, args.steps):
+    epoch_losses = []
+    for step in range(start_step, total_steps):
         batch = next(pipe)
         if arch.encdec:
             batch["frames"] = jax.random.normal(
@@ -149,17 +197,40 @@ def main(argv=None):
 
         state, metrics = run_with_retries(do_step, RetryConfig(),
                                           on_failure)
-        if step % 5 == 0 or step == args.steps - 1:
-            print(f"[train] step {step:5d} loss {float(metrics['loss']):.4f}"
+        epoch = step // steps_per_epoch
+        loss = float(metrics["loss"])
+        epoch_losses.append(loss)
+        if metrics_f is not None:
+            # json round-trips python floats exactly (repr-based), so the
+            # resume-divergence check compares bit-identical values
+            metrics_f.write(json.dumps(
+                {"step": step, "epoch": epoch, "loss": loss,
+                 "grad_norm": float(metrics["grad_norm"]),
+                 "lr": float(metrics["lr"])}) + "\n")
+            metrics_f.flush()
+        if step % 5 == 0 or step == total_steps - 1:
+            print(f"[train] step {step:5d} loss {loss:.4f}"
                   f" gnorm {float(metrics['grad_norm']):.3f}"
                   f" lr {float(metrics['lr']):.2e}"
                   f" {time.time() - t0:.1f}s")
+        if (step + 1) % steps_per_epoch == 0:
+            print(f"[train] epoch {epoch} done: mean loss "
+                  f"{sum(epoch_losses) / len(epoch_losses):.4f} "
+                  f"({len(epoch_losses)} steps)")
+            epoch_losses = []
         if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+            # async: the host transfer is the only stall; the file write
+            # overlaps the next step (bench_checkpoint measures both)
             ckpt.save(step + 1, state, block=False)
+        if args.step_delay_s:
+            time.sleep(args.step_delay_s)
     if ckpt is not None:
-        ckpt.save(args.steps, state)
+        ckpt.save(total_steps, state)
         ckpt.wait()
-    print("[train] done")
+    if metrics_f is not None:
+        metrics_f.close()
+    sstats = jax.tree_util.tree_map(int, state["solver_stats"])
+    print(f"[train] done (solver stats {sstats})")
 
 
 if __name__ == "__main__":

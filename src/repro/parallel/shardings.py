@@ -132,7 +132,23 @@ def _zero1_spec(spec: P, shape, mesh) -> P:
 
 def state_specs(state, mesh, *, ep: bool = False, zero1: bool = True,
                 fsdp: bool = False):
-    """Specs for the full train state {"params", "opt", ...}."""
+    """Specs for the full train state — the legacy ``{"params", "opt"}``
+    dict or a ``train.TrainState`` (rng / data cursor / solver stats are
+    host-scalar-sized and always replicated; the result mirrors the input
+    pytree kind so it can be used directly as jit in_shardings)."""
+    from repro.train.state import TrainState
+    if isinstance(state, TrainState):
+        as_dict = {"params": state.params, "opt": state.opt}
+        if state.compress_err is not None:
+            as_dict["compress_err"] = state.compress_err
+        base = state_specs(as_dict, mesh, ep=ep, zero1=zero1, fsdp=fsdp)
+        repl = lambda t: jax.tree_util.tree_map(  # noqa: E731
+            lambda l: P(*([None] * np.ndim(l))), t)
+        return TrainState(
+            params=base["params"], opt=base["opt"],
+            rng=repl(state.rng), data_step=repl(state.data_step),
+            solver_stats=repl(state.solver_stats),
+            compress_err=base.get("compress_err"))
     pspecs = param_specs(state["params"], mesh, ep=ep, fsdp=fsdp)
     out = {"params": pspecs}
     opt = {}

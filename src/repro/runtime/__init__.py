@@ -1,6 +1,6 @@
 from .checkpoint import Checkpointer
-from .elastic import reshard_state
+from .elastic import mesh_shardings, reshard_state
 from .failures import RetryConfig, run_with_retries
 
-__all__ = ["Checkpointer", "reshard_state", "RetryConfig",
+__all__ = ["Checkpointer", "mesh_shardings", "reshard_state", "RetryConfig",
            "run_with_retries"]

@@ -4,6 +4,18 @@ Layout:  <dir>/step_<N>/host_<i>.npz  +  <dir>/step_<N>/MANIFEST.json
 The manifest is written LAST (atomic rename), so a checkpoint directory is
 valid iff the manifest exists — a crash mid-write can never be mistaken for
 a complete checkpoint, and restore() simply picks the newest valid step.
+Stale ``.tmp_step_*`` directories left by a crash mid-write are swept on
+init and before every save (they are invisible to restore either way, but
+a crash loop must not leak disk).
+
+Async saves overlap the next train step: ``save(..., block=False)`` pulls
+the leaves to host synchronously (so donated device buffers are safe to
+reuse immediately) and writes in a background thread — the caller's stall
+is the host transfer, not the file I/O (measured by
+benchmarks/bench_checkpoint.py).  ``REPRO_CKPT_WRITE_DELAY_S`` (or the
+``write_delay_s`` arg) injects a delay between the array write and the
+manifest publish — the fault-injection harness uses it to SIGKILL a run
+mid async save and prove the resume contract (tests/test_failures.py).
 
 Arrays are saved as full logical values (this container is single-host; the
 multi-host path shards by leaf hash across hosts — the code paths are the
@@ -33,14 +45,31 @@ def _flatten(state):
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3,
                  async_save: bool = False, host_id: int = 0,
-                 n_hosts: int = 1):
+                 n_hosts: int = 1, write_delay_s: Optional[float] = None):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self.host_id = host_id
         self.n_hosts = n_hosts
+        if write_delay_s is None:
+            write_delay_s = float(
+                os.environ.get("REPRO_CKPT_WRITE_DELAY_S", "0") or 0)
+        self.write_delay_s = write_delay_s
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        self._clean_stale_tmp()
+
+    def _clean_stale_tmp(self) -> None:
+        """Remove ``.tmp_step_*`` leftovers from a crash mid-write.
+
+        Safe to call before starting a write: within one Checkpointer only
+        one writer runs at a time (``save`` joins the previous thread), so
+        any tmp dir present here belongs to a dead process.
+        """
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, state: Any, block: bool = True):
@@ -48,11 +77,14 @@ class Checkpointer:
         arrays = [np.asarray(l) for l in leaves]  # pull off device
 
         def _write():
+            self._clean_stale_tmp()
             tmp = os.path.join(self.dir, f".tmp_step_{step}_{self.host_id}")
             final = os.path.join(self.dir, f"step_{step}")
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, f"host_{self.host_id}.npz"),
                      **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+            if self.write_delay_s:   # fault-injection window (tests)
+                time.sleep(self.write_delay_s)
             manifest = {"step": step, "n_leaves": len(arrays),
                         "n_hosts": self.n_hosts, "time": time.time()}
             with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
@@ -103,10 +135,18 @@ class Checkpointer:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step}",
-                            f"host_{self.host_id}.npz")
-        data = np.load(path)
+        stepdir = os.path.join(self.dir, f"step_{step}")
         leaves, treedef = _flatten(like)
+        with open(os.path.join(stepdir, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("n_leaves") != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} in {self.dir} holds "
+                f"{manifest.get('n_leaves')} leaves but the restore target "
+                f"``like`` has {len(leaves)}: restore must be given the "
+                "same train-state pytree structure that was saved "
+                "(shape-contract mismatch, not a corrupt checkpoint)")
+        data = np.load(os.path.join(stepdir, f"host_{self.host_id}.npz"))
         if shardings is not None:
             sh_leaves = jax.tree_util.tree_leaves(
                 shardings, is_leaf=lambda x: isinstance(

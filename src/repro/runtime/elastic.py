@@ -4,13 +4,27 @@ Checkpoints store full logical arrays, so elasticity reduces to device_put
 with the new mesh's shardings.  ``reshard_state`` also handles LIVE state
 (e.g. shrinking from 512 to 256 chips after a pod loss): jax.device_put on
 committed arrays performs the resharding collectives.
+
+``specs`` must mirror ``state``'s pytree structure with a PartitionSpec per
+leaf (e.g. ``parallel.state_specs``); the traversal follows ``state``'s
+treedef, so registered nodes like ``train.TrainState`` reshard like any
+other pytree — the (4,) -> (2, 2) elasticity test in tests/test_failures.py
+pins exactly that round-trip.
 """
 from __future__ import annotations
 
 from typing import Any
 
 import jax
-from jax.sharding import NamedSharding
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def mesh_shardings(mesh, specs: Any):
+    """NamedSharding tree from a PartitionSpec tree (specs are tuple
+    subclasses, so they must be treated as leaves explicitly)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
 def reshard_state(state: Any, mesh, specs: Any):
@@ -18,6 +32,6 @@ def reshard_state(state: Any, mesh, specs: Any):
     def put(leaf, spec):
         return jax.device_put(leaf, NamedSharding(mesh, spec))
 
-    return jax.tree_util.tree_map(
-        put, state, specs,
-        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    # tree_map slices ``specs`` by ``state``'s treedef, so PartitionSpec
+    # leaves (tuple subclasses) are never descended into
+    return jax.tree_util.tree_map(put, state, specs)

@@ -7,11 +7,12 @@ harvested and freed, and the state grows through AOT-compiled lane buckets
 as offered load rises.  See docs/serving.md.
 """
 from .engine import (EngineConfig, Request, Result, SolveEngine,
-                     naive_sequential_solve, serve_timed)
+                     naive_sequential_solve, params_from_checkpoint,
+                     serve_timed)
 from .stream import latency_summary, poisson_arrivals, synthetic_stream
 
 __all__ = [
     "EngineConfig", "Request", "Result", "SolveEngine",
-    "naive_sequential_solve", "serve_timed", "synthetic_stream",
-    "poisson_arrivals", "latency_summary",
+    "naive_sequential_solve", "params_from_checkpoint", "serve_timed",
+    "synthetic_stream", "poisson_arrivals", "latency_summary",
 ]

@@ -114,6 +114,24 @@ def _map_lanes(state: SolverState, f_lane, f_buf) -> SolverState:
         atol=None if state.atol is None else f_lane(state.atol))
 
 
+def params_from_checkpoint(directory: str, like: Pytree,
+                           step: Optional[int] = None, shardings=None):
+    """Load the params leaf out of a TRAINING checkpoint (the full
+    ``train.TrainState`` contract saved by ``runtime.Checkpointer``).
+
+    ``like`` must be a state with the same pytree structure as what
+    training saved — e.g. ``train.init_train_state`` with the training
+    arch/config (parameters are overwritten, so the init values don't
+    matter).  Returns ``(params, step)``.  This is the train -> serve
+    handoff: tests/test_failures.py proves a checkpoint written by
+    ``launch.train`` boots serving with the trained weights.
+    """
+    from ..runtime import Checkpointer
+    state, step = Checkpointer(directory).restore(like, step=step,
+                                                  shardings=shardings)
+    return state["params"], step
+
+
 class SolveEngine:
     """Continuous-batching adaptive-solve server.
 
@@ -163,6 +181,23 @@ class SolveEngine:
         self._harvest_fn = jax.jit(self._harvest)
         self._state = self._blank_state(buckets[0])
         self._lane_rid: List[Optional[int]] = [None] * buckets[0]
+        self.restored_step: Optional[int] = None
+
+    @classmethod
+    def from_checkpoint(cls, f, tab: ButcherTableau, cfg: AdaptiveConfig,
+                        directory: str, like: Pytree, x0_template: Pytree,
+                        engine_cfg: EngineConfig = None,
+                        combine_backend: str = "auto",
+                        step: Optional[int] = None) -> "SolveEngine":
+        """Boot an engine from a TRAINING checkpoint: the params leaf of
+        the ``train.TrainState`` saved by ``launch.train`` becomes the
+        field parameters (``like`` supplies the saved pytree structure,
+        see ``params_from_checkpoint``)."""
+        params, step = params_from_checkpoint(directory, like, step)
+        engine = cls(f, tab, cfg, params, x0_template, engine_cfg,
+                     combine_backend)
+        engine.restored_step = step
+        return engine
 
     # -- slot-state construction / resizing ---------------------------------
     def _blank_state(self, B: int) -> SolverState:

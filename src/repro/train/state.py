@@ -1,0 +1,102 @@
+"""The full-train-state checkpoint contract.
+
+``TrainState`` is ONE registered pytree carrying everything a training run
+needs to resume bit-identically after process death:
+
+  * ``params``        — model parameters,
+  * ``opt``           — AdamW state (m, v, step = the LR-schedule step,
+                        optional f32 master copies),
+  * ``rng``           — the training PRNG key, split once per step so any
+                        stochastic layer added later rides the same contract,
+  * ``data_step``     — the data cursor: the next pipeline step to consume
+                        (``TokenPipeline`` is keyed by step, so restoring
+                        this resumes the exact sample stream),
+  * ``solver_stats``  — cumulative ODE-solve counters (fixed-grid NODE
+                        forward solves are static counts, see
+                        ``node_solver_counts``),
+  * ``compress_err``  — int8 gradient-compression error-feedback residual
+                        (``None`` when compression is off; the residual is
+                        part of the convergence argument, so it must survive
+                        a restart).
+
+The contract is what ``runtime.Checkpointer`` saves/restores and what the
+fault-injection harness (tests/test_failures.py) proves: kill the process
+anywhere — including mid async save — and the resumed loss curve is
+bit-identical to the uninterrupted run.  See docs/training.md.
+
+Mapping-style access (``state["params"]``, ``"compress_err" in state``) is
+kept so older dict-state callers (launch/serve.py, tests) read either form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+_FIELDS = ("params", "opt", "rng", "data_step", "solver_stats",
+           "compress_err")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    rng: Any
+    data_step: Any                 # int32 scalar: next data step to consume
+    solver_stats: Any              # {"n_steps": int32, "n_fevals": int32}
+    compress_err: Optional[Any] = None
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+    # -- mapping-style compatibility with the legacy dict state -------------
+    def __getitem__(self, key):
+        if key not in _FIELDS or (key == "compress_err"
+                                  and self.compress_err is None):
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __contains__(self, key):
+        return key in _FIELDS and not (key == "compress_err"
+                                       and self.compress_err is None)
+
+    def keys(self):
+        return tuple(f for f in _FIELDS if f in self)
+
+    def replace(self, **kw) -> "TrainState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_solver_stats() -> dict:
+    return {"n_steps": jnp.zeros((), jnp.int32),
+            "n_fevals": jnp.zeros((), jnp.int32)}
+
+
+def node_solver_counts(arch) -> tuple:
+    """Static per-forward-solve counts for a fixed-grid NODE arch.
+
+    The paper's fixed-grid drivers take exactly ``n_steps`` steps of
+    ``s = len(b)`` stage evaluations each (the embedded error estimate is
+    skipped on fixed grids), so the forward solve cost is a static
+    property of the config — no instrumentation of the jitted step needed.
+    Non-NODE archs solve nothing: (0, 0).
+    """
+    if arch.node.mode != "node":
+        return 0, 0
+    from repro.core.tableau import get_tableau
+    n_steps = arch.node.n_steps or arch.n_repeats
+    return n_steps, n_steps * len(get_tableau(arch.node.method).b)

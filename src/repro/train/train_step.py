@@ -26,6 +26,7 @@ from repro.optim import (AdamWConfig, CompressionConfig, adamw_init,
                          decompress_grads)
 from repro.optim.compress import init_error_state
 from .losses import IGNORE, lm_loss, lm_loss_chunked
+from .state import TrainState, init_solver_stats, node_solver_counts
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,17 +42,19 @@ class TrainConfig:
     loss_chunk: int = 512
 
 
-def init_train_state(key, arch: ArchConfig, tcfg: TrainConfig):
+def init_train_state(key, arch: ArchConfig, tcfg: TrainConfig) -> TrainState:
+    """Fresh ``TrainState`` — the full checkpoint contract (see state.py)."""
+    init_key, train_key = jax.random.split(key)
     dtype = jnp.dtype(tcfg.param_dtype)
     if arch.encdec:
-        params = init_encdec(key, arch, dtype)
+        params = init_encdec(init_key, arch, dtype)
     else:
-        params = init_lm(key, arch, dtype)
-    state = {"params": params, "opt": adamw_init(params, tcfg.adamw)}
-    err = init_error_state(params, tcfg.compression)
-    if err is not None:
-        state["compress_err"] = err
-    return state
+        params = init_lm(init_key, arch, dtype)
+    return TrainState(
+        params=params, opt=adamw_init(params, tcfg.adamw), rng=train_key,
+        data_step=jnp.zeros((), jnp.int32),
+        solver_stats=init_solver_stats(),
+        compress_err=init_error_state(params, tcfg.compression))
 
 
 def _forward_loss(params, batch, arch: ArchConfig, shard,
@@ -100,6 +103,10 @@ def make_train_step(arch: ArchConfig, tcfg: TrainConfig,
         (total, ce), grads = jax.value_and_grad(lf, has_aux=True)(params)
         return grads, total, ce
 
+    # static forward-solve cost of one train step (NODE archs; see state.py)
+    solve_steps, solve_fevals = node_solver_counts(arch)
+    n_solves = max(tcfg.microbatches, 1)
+
     def train_step(state, batch):
         params = state["params"]
         if tcfg.microbatches > 1:
@@ -139,10 +146,24 @@ def make_train_step(arch: ArchConfig, tcfg: TrainConfig,
         lr = lr_fn(state["opt"]["step"])
         params, opt = adamw_update(params, grads, state["opt"], lr,
                                    tcfg.adamw)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        if isinstance(state, TrainState):
+            # advance every contract field: split the rng stream (the step
+            # key is reserved for stochastic layers), bump the data cursor,
+            # accumulate the static solve counters
+            rng, _step_key = jax.random.split(state.rng)
+            stats = {
+                "n_steps": state.solver_stats["n_steps"]
+                + jnp.int32(solve_steps * n_solves),
+                "n_fevals": state.solver_stats["n_fevals"]
+                + jnp.int32(solve_fevals * n_solves)}
+            return TrainState(params=params, opt=opt, rng=rng,
+                              data_step=state.data_step + 1,
+                              solver_stats=stats,
+                              compress_err=new_err), metrics
         new_state = {"params": params, "opt": opt}
         if new_err is not None:
             new_state["compress_err"] = new_err
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         return new_state, metrics
 
     return train_step

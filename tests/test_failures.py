@@ -1,0 +1,427 @@
+"""Fault-injection harness: training survives process death (ISSUE 10).
+
+Acceptance criteria pinned here:
+
+  * SIGKILL the training driver mid-epoch at a (seeded-)random step —
+    including MID async checkpoint save — resume with ``--resume``, and the
+    resumed loss/grad-norm trajectory is BIT-identical to an uninterrupted
+    golden run, for both the ``symplectic`` (the paper's exact-gradient
+    method) and ``backprop`` modes.  Exactness is what makes this a spec:
+    there is no tolerance to tune.
+  * Elastic restart: a train-state pytree saved/resharded on a (4,) mesh
+    restores onto a (2, 2) mesh (and round-trips back) value-identical,
+    via ``runtime.elastic.reshard_state`` + ``Checkpointer`` shardings
+    (the ``run_sharded`` subprocess fixture, tests/conftest.py).
+  * ``runtime.failures.run_with_retries`` obeys its documented contract
+    (property-tested): on_failure exactly once per failed attempt, linear
+    backoff only before attempts that happen, non-retryable exceptions
+    propagate unwrapped, success after k <= max_retries returns the value.
+  * Train -> serve handoff: ``repro.serve`` boots from the params leaf of
+    a TRAINING checkpoint (``SolveEngine.from_checkpoint`` in-process and
+    ``launch.serve lm --ckpt-dir`` end-to-end).
+
+The subprocess kill tests are compile-bound (each driver boot recompiles
+the train step) and marked ``slow``; the CI train-smoke lane runs the same
+kill/resume flow against the real CLI.
+"""
+import json
+import os
+import pathlib
+import random
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # minimal containers: jax + pytest
+    from hypothesis_compat import given, settings, st
+
+from repro.runtime import Checkpointer, RetryConfig, run_with_retries
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+# ---------------------------------------------------------------------------
+# run_with_retries: property tests of the documented contract
+# ---------------------------------------------------------------------------
+
+def _failing_fn(n_failures, exc=RuntimeError, value="ok"):
+    calls = []
+
+    def fn():
+        calls.append(None)
+        if len(calls) <= n_failures:
+            raise exc(f"injected failure {len(calls)}")
+        return value
+
+    return fn, calls
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_failures=st.integers(min_value=0, max_value=4),
+       max_retries=st.integers(min_value=0, max_value=4))
+def test_retry_contract(n_failures, max_retries):
+    cfg = RetryConfig(max_retries=max_retries, backoff_s=0.5)
+    fn, calls = _failing_fn(n_failures)
+    failures, sleeps = [], []
+    on_failure = lambda: failures.append(1)  # noqa: E731
+
+    if n_failures <= max_retries:
+        out = run_with_retries(fn, cfg, on_failure, sleeps.append)
+        assert out == "ok"
+        assert len(calls) == n_failures + 1
+        # on_failure exactly once per failed attempt
+        assert len(failures) == n_failures
+        # linear backoff, paid only before attempts that happen
+        assert sleeps == [0.5 * k for k in range(1, n_failures + 1)]
+    else:
+        with pytest.raises(RuntimeError, match="injected failure"):
+            run_with_retries(fn, cfg, on_failure, sleeps.append)
+        assert len(calls) == max_retries + 1
+        # ...including the final attempt whose exception propagates
+        assert len(failures) == max_retries + 1
+        # never a sleep after the last attempt
+        assert sleeps == [0.5 * k for k in range(1, max_retries + 1)]
+
+
+@settings(max_examples=10, deadline=None)
+@given(exc=st.sampled_from([ValueError, KeyError, ArithmeticError]))
+def test_retry_non_retryable_propagates_unwrapped(exc):
+    cfg = RetryConfig(max_retries=3, retryable=(RuntimeError,))
+    fn, calls = _failing_fn(5, exc=exc)
+    failures, sleeps = [], []
+    with pytest.raises(exc):
+        run_with_retries(fn, cfg, lambda: failures.append(1),
+                         sleeps.append)
+    # immediate: one call, no on_failure, no backoff
+    assert len(calls) == 1 and failures == [] and sleeps == []
+
+
+def test_retry_on_failure_can_mutate_state():
+    """The advertised use: on_failure restores state before the retry."""
+    state = {"good": False}
+    cfg = RetryConfig(max_retries=2, backoff_s=0.0)
+
+    def fn():
+        if not state["good"]:
+            raise RuntimeError("bad state")
+        return 42
+
+    def on_failure():
+        state["good"] = True
+
+    assert run_with_retries(fn, cfg, on_failure, lambda s: None) == 42
+
+
+# ---------------------------------------------------------------------------
+# subprocess kill/resume harness
+# ---------------------------------------------------------------------------
+
+TOTAL_STEPS = 8     # 2 epochs x 4 steps; every run MUST use the same total
+#                     (the LR schedule depends on it — a different total is
+#                     a different trajectory, not a resume bug)
+TRAIN_ARGS = ["--arch", "qwen3-0.6b", "--smoke", "--epochs", "2",
+              "--steps-per-epoch", "4", "--global-batch", "2",
+              "--seq-len", "16", "--ckpt-every", "2"]
+
+
+def _train_cmd(grad_mode, ckpt_dir, metrics, extra=()):
+    cmd = [sys.executable, "-m", "repro.launch.train", *TRAIN_ARGS,
+           "--grad-mode", grad_mode, "--metrics-out", str(metrics)]
+    if ckpt_dir is not None:
+        cmd += ["--ckpt-dir", str(ckpt_dir)]
+    return cmd + list(extra)
+
+
+def _env(**extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra)
+    return env
+
+
+def _run(cmd, env, timeout=600):
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, (
+        f"driver failed (rc={proc.returncode}):\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc
+
+
+def _load_metrics(path) -> dict:
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rec = json.loads(line)
+                rows[int(rec["step"])] = rec
+    return rows
+
+
+def _assert_bit_identical(golden, other, min_overlap=2):
+    """json round-trips python floats exactly, so == is exact-bits."""
+    common = sorted(set(golden) & set(other))
+    assert len(common) >= min_overlap, (
+        f"only {len(common)} overlapping steps (need >= {min_overlap})")
+    for step in common:
+        for key in ("loss", "grad_norm", "lr"):
+            assert golden[step][key] == other[step][key], (
+                f"step {step} {key}: golden={golden[step][key]!r} "
+                f"other={other[step][key]!r}")
+
+
+def _kill_when(proc, predicate, timeout=180):
+    """SIGKILL ``proc`` once ``predicate()`` holds; False if it finished
+    first (the fault never landed)."""
+    t0 = time.time()
+    try:
+        while time.time() - t0 < timeout:
+            if predicate():
+                proc.kill()
+                proc.wait()
+                return True
+            if proc.poll() is not None:
+                return False
+            time.sleep(0.02)
+        raise AssertionError("kill condition never became true")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+@pytest.fixture(scope="session")
+def golden_metrics(tmp_path_factory):
+    """Uninterrupted reference runs, computed once per grad mode."""
+    cache = {}
+
+    def get(grad_mode):
+        if grad_mode not in cache:
+            d = tmp_path_factory.mktemp(f"golden_{grad_mode}")
+            path = d / "golden.jsonl"
+            _run(_train_cmd(grad_mode, None, path), _env())
+            rows = _load_metrics(path)
+            assert sorted(rows) == list(range(TOTAL_STEPS))
+            cache[grad_mode] = rows
+        return cache[grad_mode]
+
+    return get
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("grad_mode", ["symplectic", "backprop"])
+def test_sigkill_mid_epoch_resume_bit_identical(tmp_path, golden_metrics,
+                                                grad_mode):
+    golden = golden_metrics(grad_mode)
+    # randomized-but-reproducible kill step, always past the first
+    # checkpoint (ckpt-every 2) and before the end
+    kill_after = random.Random(f"kill-{grad_mode}").randint(3, 6)
+    ckpt = tmp_path / "ckpt"
+    victim = tmp_path / "victim.jsonl"
+    victim.touch()
+    proc = subprocess.Popen(
+        _train_cmd(grad_mode, ckpt, victim, ["--step-delay-s", "0.25"]),
+        env=_env(), stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    killed = _kill_when(
+        proc, lambda: len(victim.read_text().splitlines()) >= kill_after)
+    assert killed, "driver finished before the fault landed (pacing broken)"
+    done = _load_metrics(victim)
+    assert len(done) < TOTAL_STEPS, "kill landed after the last step"
+
+    resumed = tmp_path / "resumed.jsonl"
+    out = _run(_train_cmd(grad_mode, ckpt, resumed, ["--resume"]), _env())
+    assert "resumed from step" in out.stdout
+
+    rows = _load_metrics(resumed)
+    # the resumed run replays from the newest checkpoint to the end...
+    assert max(rows) == TOTAL_STEPS - 1
+    # ...and every step — the victim's prefix AND the resumed suffix — is
+    # bit-identical to the uninterrupted run
+    _assert_bit_identical(golden, rows, min_overlap=2)
+    _assert_bit_identical(golden, done, min_overlap=1)
+    assert set(done) | set(rows) == set(range(TOTAL_STEPS))
+
+
+@pytest.mark.slow
+def test_sigkill_mid_async_save_resume(tmp_path, golden_metrics):
+    """Kill DURING an async checkpoint write (between the array write and
+    the manifest publish — REPRO_CKPT_WRITE_DELAY_S holds that window
+    open).  The half-written ``.tmp_step_*`` must be invisible to restore,
+    swept on the next boot, and the resumed trajectory bit-identical."""
+    golden = golden_metrics("symplectic")
+    ckpt = tmp_path / "ckpt"
+    victim = tmp_path / "victim.jsonl"
+    victim.touch()
+    proc = subprocess.Popen(
+        _train_cmd("symplectic", ckpt, victim, ["--step-delay-s", "0.1"]),
+        env=_env(REPRO_CKPT_WRITE_DELAY_S="1.5"),
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+
+    def mid_save_with_fallback():
+        # wait for: one PUBLISHED checkpoint (so resume has something) AND
+        # a live tmp dir (a save in its injected-delay window)
+        if not ckpt.exists():
+            return False
+        names = os.listdir(ckpt)
+        published = any(
+            n.startswith("step_")
+            and (ckpt / n / "MANIFEST.json").exists() for n in names)
+        in_flight = any(n.startswith(".tmp_step_") for n in names)
+        return published and in_flight
+
+    killed = _kill_when(proc, mid_save_with_fallback)
+    assert killed, "driver finished before a mid-save kill window opened"
+    stale = [n for n in os.listdir(ckpt) if n.startswith(".tmp_step_")]
+    assert stale, "kill did not land mid async save"
+
+    resumed = tmp_path / "resumed.jsonl"
+    out = _run(_train_cmd("symplectic", ckpt, resumed, ["--resume"]),
+               _env())
+    assert "resumed from step" in out.stdout
+    # the stale tmp dir was swept on boot (Checkpointer init)
+    assert not any(n.startswith(".tmp_step_") for n in os.listdir(ckpt))
+    _assert_bit_identical(golden, _load_metrics(resumed), min_overlap=2)
+
+
+# ---------------------------------------------------------------------------
+# elastic restart: (4,) -> (2, 2) on real (forced-host) devices
+# ---------------------------------------------------------------------------
+
+_ELASTIC_SCRIPT = r"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_arch
+from repro.launch.mesh import make_debug_mesh, make_lane_mesh
+from repro.parallel import state_specs
+from repro.runtime import Checkpointer, mesh_shardings, reshard_state
+from repro.train import TrainConfig, init_train_state
+
+arch = get_smoke_arch("qwen3-0.6b")
+state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+ref = jax.tree_util.tree_leaves(jax.tree_util.tree_map(np.asarray, state))
+
+mesh1 = make_lane_mesh((4,))        # ("data",)       — 4-way DP
+mesh2 = make_debug_mesh(2, 2)       # ("data","model") — 2x2 after restart
+specs1 = state_specs(state, mesh1)
+specs2 = state_specs(state, mesh2)
+
+# live reshard (pod loss / regrowth): (4,) -> (2, 2) -> (4,)
+s1 = reshard_state(state, mesh1, specs1)
+s2 = reshard_state(s1, mesh2, specs2)
+s3 = reshard_state(s2, mesh1, specs1)
+for name, s in (("s2", s2), ("s3", s3)):
+    for a, b in zip(ref, jax.tree_util.tree_leaves(s)):
+        np.testing.assert_array_equal(a, np.asarray(b), err_msg=name)
+# the (2, 2) mesh actually shards something (embed etc. over "model")
+assert any(not l.sharding.is_fully_replicated
+           for l in jax.tree_util.tree_leaves(s2)), "nothing sharded"
+
+# checkpoint written under the (4,) topology restores under (2, 2)
+d = tempfile.mkdtemp()
+Checkpointer(d).save(5, s1)
+sh2 = mesh_shardings(mesh2, specs2)
+restored, step = Checkpointer(d).restore(state, shardings=sh2)
+assert step == 5
+for a, b in zip(ref, jax.tree_util.tree_leaves(restored)):
+    np.testing.assert_array_equal(a, np.asarray(b))
+for l, sh in zip(jax.tree_util.tree_leaves(restored),
+                 jax.tree_util.tree_leaves(
+                     sh2, is_leaf=lambda x: isinstance(
+                         x, jax.sharding.Sharding))):
+    assert l.sharding == sh, (l.sharding, sh)
+print("PASS")
+"""
+
+
+def test_elastic_restart_mesh_shape_change(run_sharded):
+    out = run_sharded(_ELASTIC_SCRIPT, devices=4)
+    assert "PASS" in out
+
+
+# ---------------------------------------------------------------------------
+# train -> serve handoff
+# ---------------------------------------------------------------------------
+
+def test_solve_engine_from_training_checkpoint(tmp_path):
+    """The ODE serve engine boots from the params leaf of a training
+    checkpoint and produces results identical to an engine built from the
+    live params."""
+    from repro.core import AdaptiveConfig
+    from repro.core.tableau import get_tableau
+    from repro.serve import EngineConfig, Request, SolveEngine
+    from repro.train.state import TrainState, init_solver_stats
+
+    k = jax.random.split(jax.random.PRNGKey(3), 2)
+    params = {"w": jax.random.normal(k[0], (4, 4)) * 0.3,
+              "b": jax.random.normal(k[1], (4,)) * 0.1}
+
+    def field(x, t, p):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    trained = TrainState(params=params, opt={"step": jnp.int32(11)},
+                         rng=jax.random.PRNGKey(9),
+                         data_step=jnp.int32(11),
+                         solver_stats=init_solver_stats())
+    Checkpointer(str(tmp_path)).save(11, trained)
+
+    like = jax.tree_util.tree_map(jnp.zeros_like, trained)
+    cfg = AdaptiveConfig(rtol=1e-4, atol=1e-6, max_steps=64,
+                         initial_step=0.05)
+    eng = SolveEngine.from_checkpoint(
+        field, get_tableau("bosh3"), cfg, str(tmp_path), like,
+        x0_template=jnp.zeros((4,)), engine_cfg=EngineConfig(buckets=(2,)))
+    assert eng.restored_step == 11
+    ref = SolveEngine(field, get_tableau("bosh3"), cfg, params,
+                      jnp.zeros((4,)), EngineConfig(buckets=(2,)))
+
+    x0 = jax.random.normal(jax.random.PRNGKey(7), (4,))
+    req = Request(x0=x0, t0=0.0, t1=0.5, rtol=1e-4, atol=1e-6)
+    (r_ck,) = eng.run([req]).values()
+    (r_ref,) = ref.run([req]).values()
+    assert r_ck.succeeded and r_ref.succeeded
+    np.testing.assert_array_equal(np.asarray(r_ck.x_final),
+                                  np.asarray(r_ref.x_final))
+    assert r_ck.n_fevals == r_ref.n_fevals
+
+
+def test_params_from_checkpoint_rejects_wrong_contract(tmp_path):
+    """A mismatched restore template is a clear shape-contract error."""
+    from repro.serve import params_from_checkpoint
+    from repro.train.state import TrainState, init_solver_stats
+
+    state = TrainState(params={"w": jnp.ones((2, 2))}, opt={},
+                       rng=jax.random.PRNGKey(0), data_step=jnp.int32(0),
+                       solver_stats=init_solver_stats())
+    Checkpointer(str(tmp_path)).save(1, state)
+    wrong = state.replace(
+        params={"w": jnp.ones((2, 2)), "extra": jnp.ones(3)})
+    with pytest.raises(ValueError, match="shape-contract mismatch"):
+        params_from_checkpoint(str(tmp_path), wrong)
+
+
+@pytest.mark.slow
+def test_lm_serve_boots_from_training_checkpoint(tmp_path):
+    """End-to-end CLI handoff: train a few steps with checkpoints, then
+    ``launch.serve lm --ckpt-dir`` decodes with the trained params."""
+    ckpt = tmp_path / "ckpt"
+    _run([sys.executable, "-m", "repro.launch.train", "--arch",
+          "qwen3-0.6b", "--smoke", "--steps", "2", "--global-batch", "2",
+          "--seq-len", "16", "--grad-mode", "symplectic",
+          "--ckpt-dir", str(ckpt), "--ckpt-every", "2"], _env())
+    out = _run([sys.executable, "-m", "repro.launch.serve", "lm",
+                "--arch", "qwen3-0.6b", "--smoke", "--grad-mode",
+                "symplectic", "--ckpt-dir", str(ckpt), "--batch", "2",
+                "--prompt-len", "8", "--gen-len", "4"], _env())
+    assert f"restored params from {ckpt} step 2" in out.stdout
+    assert "sample generation" in out.stdout

@@ -62,6 +62,40 @@ def test_checkpoint_ignores_partial(tmp_path):
     assert step == 1
 
 
+def test_checkpoint_sweeps_stale_tmp_dirs(tmp_path):
+    """``.tmp_step_*`` leftovers from a crash mid-write are invisible to
+    restore AND swept on init / before the next save (a crash loop must
+    not leak disk)."""
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(1, s)
+    stale = tmp_path / ".tmp_step_9_0"
+    stale.mkdir()
+    (stale / "host_0.npz").write_bytes(b"half-written")
+    # invisible to discovery
+    assert ck.list_steps() == [1]
+    # a new Checkpointer (= process restart) sweeps it
+    ck2 = Checkpointer(str(tmp_path))
+    assert not stale.exists()
+    # and a save through an EXISTING instance sweeps before writing
+    stale.mkdir()
+    ck2.save(2, s)
+    assert not stale.exists()
+    assert ck2.list_steps() == [1, 2]
+
+
+def test_checkpoint_restore_rejects_wrong_leaf_count(tmp_path):
+    """Restoring with a template whose pytree doesn't match what was saved
+    is a clear shape-contract error, not a bare KeyError from npz."""
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(1, s)
+    wrong = dict(s)
+    wrong["params"] = dict(s["params"], extra=jnp.zeros(3))
+    with pytest.raises(ValueError, match="shape-contract mismatch"):
+        ck.restore(wrong)
+
+
 def test_retry_recovers():
     calls = {"n": 0}
 

@@ -1,0 +1,165 @@
+"""The ``train.TrainState`` checkpoint contract and the train-step factory.
+
+Pins (ISSUE 10):
+  * ``TrainState`` is one registered pytree (jit/flatten round-trips) with
+    mapping-style access for legacy dict-state callers;
+  * one ``train_step`` advances EVERY contract field: optimizer + LR
+    schedule step, rng stream, data cursor, static solver counters
+    (``node_solver_counts``);
+  * the grad-accumulation path (microbatches=k) matches the unaccumulated
+    step to float tolerance;
+  * the int8 compression error-feedback residual survives a checkpoint
+    save/restore — continued training from the restored state is BITWISE
+    identical to continuing from the live state;
+  * ``parallel.state_specs`` mirrors a ``TrainState`` into a TrainState of
+    PartitionSpecs (host scalars replicated), usable as jit in_shardings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_arch
+from repro.configs.base import NodeConfig
+from repro.data.tokens import synthetic_lm_batch
+from repro.optim import CompressionConfig
+from repro.parallel import state_specs
+from repro.runtime import Checkpointer
+from repro.train import (TrainConfig, TrainState, init_train_state,
+                         make_train_step, node_solver_counts)
+
+
+def _batch(step=0, batch=2, seq=16):
+    arch = get_smoke_arch("qwen3-0.6b")
+    return synthetic_lm_batch(step, batch, seq + 1, arch.vocab)
+
+
+def _leaves(t):
+    return jax.tree_util.tree_leaves(t)
+
+
+def test_train_state_is_pytree_with_mapping_access():
+    arch = get_smoke_arch("qwen3-0.6b")
+    state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+    assert isinstance(state, TrainState)
+    assert state["params"] is state.params
+    assert state["opt"] is state.opt
+    # compression off => no compress_err entry, like the legacy dict state
+    assert "compress_err" not in state
+    assert state.get("compress_err") is None
+    with pytest.raises(KeyError):
+        state["compress_err"]
+    assert set(state.keys()) == {"params", "opt", "rng", "data_step",
+                                 "solver_stats"}
+
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, TrainState)
+    out = jax.jit(lambda s: s)(state)
+    assert isinstance(out, TrainState)
+    for a, b in zip(_leaves(state), _leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_step_advances_every_contract_field():
+    arch = get_smoke_arch("qwen3-0.6b").with_(
+        node=NodeConfig(mode="node", method="euler",
+                        grad_mode="symplectic"))
+    tcfg = TrainConfig()
+    state = init_train_state(jax.random.PRNGKey(0), arch, tcfg)
+    assert int(state.data_step) == 0
+    assert int(state.solver_stats["n_steps"]) == 0
+
+    step_fn = jax.jit(make_train_step(arch, tcfg))
+    batch = _batch(0)
+    s1, m1 = step_fn(state, batch)
+    s2, m2 = step_fn(s1, _batch(1))
+
+    assert int(s1.data_step) == 1 and int(s2.data_step) == 2
+    assert int(s2.opt["step"]) == 2          # the LR-schedule step
+    # the rng stream advances every step (stochastic layers ride the
+    # contract without changing the checkpoint format)
+    assert not np.array_equal(np.asarray(state.rng), np.asarray(s1.rng))
+    assert not np.array_equal(np.asarray(s1.rng), np.asarray(s2.rng))
+    # static solve counters: fixed-grid NODE cost is a config property
+    n_steps, n_fevals = node_solver_counts(arch)
+    assert n_steps > 0 and n_fevals >= n_steps
+    assert int(s2.solver_stats["n_steps"]) == 2 * n_steps
+    assert int(s2.solver_stats["n_fevals"]) == 2 * n_fevals
+    # and params actually moved
+    assert float(m2["loss"]) != float(m1["loss"])
+
+
+def test_grad_accumulation_matches_unaccumulated():
+    arch = get_smoke_arch("qwen3-0.6b")
+    state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+    batch = _batch(0, batch=4)
+
+    s_full, m_full = jax.jit(
+        make_train_step(arch, TrainConfig(microbatches=1)))(state, batch)
+    s_acc, m_acc = jax.jit(
+        make_train_step(arch, TrainConfig(microbatches=2)))(state, batch)
+
+    np.testing.assert_allclose(float(m_acc["loss"]), float(m_full["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m_acc["grad_norm"]),
+                               float(m_full["grad_norm"]), rtol=1e-4)
+    for a, b in zip(_leaves(s_acc.params), _leaves(s_full.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_compress_error_feedback_survives_checkpoint(tmp_path):
+    arch = get_smoke_arch("qwen3-0.6b")
+    tcfg = TrainConfig(compression=CompressionConfig(mode="int8"))
+    state = init_train_state(jax.random.PRNGKey(0), arch, tcfg)
+    assert "compress_err" in state and state.compress_err is not None
+
+    step_fn = jax.jit(make_train_step(arch, tcfg))
+    s1, _ = step_fn(state, _batch(0))
+    # quantization left a nonzero residual to carry into the next step
+    assert any(np.any(np.asarray(l))
+               for l in _leaves(s1.compress_err))
+
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, s1)
+    like = init_train_state(jax.random.PRNGKey(7), arch, tcfg)
+    restored, step = ck.restore(like)
+    assert step == 1
+
+    # continuing from the restored state is bitwise identical — the
+    # residual is part of the convergence argument, so it must survive
+    s2_live, m_live = step_fn(s1, _batch(1))
+    s2_rest, m_rest = step_fn(restored, _batch(1))
+    assert float(m_live["loss"]) == float(m_rest["loss"])
+    for a, b in zip(_leaves(s2_live), _leaves(s2_rest)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class _FakeMesh:
+    """Duck-typed mesh (the spec layer reads only .shape/.axis_names)."""
+    shape = {"data": 2, "model": 2}
+    axis_names = ("data", "model")
+
+
+def test_state_specs_mirrors_train_state():
+    arch = get_smoke_arch("qwen3-0.6b")
+    state = init_train_state(jax.random.PRNGKey(0), arch, TrainConfig())
+    specs = state_specs(state, _FakeMesh())
+    assert isinstance(specs, TrainState)
+
+    is_p = lambda x: isinstance(x, P)  # noqa: E731
+    # host-scalar fields replicated
+    assert specs.data_step == P()
+    assert all(s == P() for s in
+               jax.tree_util.tree_leaves(specs.solver_stats, is_leaf=is_p))
+    assert all(e is None for e in specs.rng)
+    # something in params is model-sharded (smoke embed is (128, 32))
+    axes = {e for s in jax.tree_util.tree_leaves(specs.params,
+                                                 is_leaf=is_p)
+            for e in s if e is not None}
+    assert "model" in axes
+    # treedefs line up, so the spec tree works as jit in_shardings
+    assert (jax.tree_util.tree_structure(specs, is_leaf=is_p)
+            == jax.tree_util.tree_structure(state))

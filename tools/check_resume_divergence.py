@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Fail if a resumed training run's loss curve diverges from the golden run.
+
+    python tools/check_resume_divergence.py golden.jsonl resumed.jsonl \
+        [--keys loss grad_norm lr] [--min-overlap 1]
+
+Both files are ``--metrics-out`` JSONL from ``repro.launch.train`` (one
+object per step).  Every step present in BOTH files must carry BIT-IDENTICAL
+values for the compared keys — json.dumps round-trips python floats exactly,
+so ``==`` on the parsed floats is an exact-bits comparison.  The symplectic
+adjoint's exact-gradient property is what makes this a testable spec: there
+is no tolerance to tune, the resumed curve either matches or the checkpoint
+contract is broken.
+
+Exit codes: 0 match, 1 divergence, 2 usage/empty-overlap.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            rows[int(rec["step"])] = rec   # last write wins (resume overlap)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("golden")
+    ap.add_argument("resumed")
+    ap.add_argument("--keys", nargs="+", default=["loss", "grad_norm"])
+    ap.add_argument("--min-overlap", type=int, default=1,
+                    help="require at least this many common steps")
+    args = ap.parse_args(argv)
+
+    golden, resumed = load(args.golden), load(args.resumed)
+    common = sorted(set(golden) & set(resumed))
+    if len(common) < args.min_overlap:
+        print(f"[check_resume] only {len(common)} overlapping steps "
+              f"(need >= {args.min_overlap}) — nothing to compare",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for step in common:
+        for k in args.keys:
+            a, b = golden[step].get(k), resumed[step].get(k)
+            if a != b:
+                print(f"[check_resume] DIVERGED at step {step} {k}: "
+                      f"golden={a!r} resumed={b!r}", file=sys.stderr)
+                bad += 1
+    if bad:
+        print(f"[check_resume] {bad} divergent values over {len(common)} "
+              f"common steps", file=sys.stderr)
+        return 1
+    print(f"[check_resume] OK: {len(common)} common steps bit-identical "
+          f"on {args.keys}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
